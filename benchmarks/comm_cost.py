@@ -1,0 +1,45 @@
+"""Paper Table 1 / 2: per-topology communication cost and consensus
+characteristics — max degree, messages per node per round, bytes per node
+per round for an 8B-parameter bf16 model, spectral consensus rate (static
+graphs), finite-time length (time-varying)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.graphs import build_topology
+from repro.core.mixing import (is_finite_time_convergent,
+                               spectral_consensus_rate)
+
+from .common import emit
+
+PARAM_BYTES = int(8e9 * 2)     # 8B params, bf16
+
+TOPOS = [("base", 1), ("base", 2), ("base", 4), ("simple_base", 1),
+         ("one_peer_exp", None), ("exp", None), ("ring", None),
+         ("torus", None), ("complete", None)]
+
+
+def run(ns=(25, 64, 256)) -> dict:
+    out = {}
+    for n in ns:
+        for name, k in TOPOS:
+            t0 = time.perf_counter()
+            s = build_topology(name, n, k)
+            us = (time.perf_counter() - t0) * 1e6
+            gb = s.bytes_per_node_per_round(PARAM_BYTES) / 1e9
+            if len(s.Ws) == 1 and not s.finite_time:
+                beta = spectral_consensus_rate(s.W(0))
+                rate = f"beta={beta:.4f}"
+            else:
+                rate = (f"finite_len={len(s)}"
+                        if is_finite_time_convergent(s) else "asymptotic")
+            label = f"comm/{name}" + (f"-k{k}" if k else "") + f"/n{n}"
+            emit(label, us,
+                 f"maxdeg={s.max_degree};GB_per_node_round={gb:.1f};{rate}")
+            out[label] = dict(deg=s.max_degree, gb=gb)
+    # headline: Base-(k+1) cheaper than exp for k < ceil(log2 n)
+    for n in ns:
+        exp_gb = out[f"comm/exp/n{n}"]["gb"]
+        for k in (1, 2):
+            assert out[f"comm/base-k{k}/n{n}"]["gb"] < exp_gb
+    return out

@@ -1,0 +1,18 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        out = fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6  # microseconds
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,36 @@
+"""Paper Fig. 5 / 20 + Theorem 1: schedule length of Simple Base-(k+1) vs
+Base-(k+1) vs the 2*log_{k+1}(n) + 2 bound, n in [2, 300]."""
+from __future__ import annotations
+
+import math
+import time
+
+from repro.core.graphs import base_graph, simple_base_graph
+
+from .common import emit
+
+
+def run() -> dict:
+    out = {}
+    for k in (1, 2, 4):
+        t0 = time.perf_counter()
+        viol = 0
+        shorter = 0
+        tot_b = tot_s = 0
+        for n in range(2, 301):
+            nodes = list(range(n))
+            lb = len(base_graph(nodes, k))
+            ls = len(simple_base_graph(nodes, k))
+            bound = 2 * math.log(n, k + 1) + 2
+            viol += (lb > bound + 1e-9) or (ls > bound + 1e-9) or (lb > ls)
+            shorter += lb < ls
+            tot_b += lb
+            tot_s += ls
+        us = (time.perf_counter() - t0) * 1e6 / 299
+        emit(f"length/k{k}", us,
+             f"violations={viol};base_shorter_count={shorter};"
+             f"mean_base={tot_b / 299:.2f};mean_simple={tot_s / 299:.2f}")
+        assert viol == 0
+        out[k] = dict(shorter=shorter, mean_base=tot_b / 299,
+                      mean_simple=tot_s / 299)
+    return out

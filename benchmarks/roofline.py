@@ -1,0 +1,192 @@
+"""§Roofline: three-term roofline per (arch x input-shape), single-pod
+mesh, derived from the compiled dry-run artifacts in experiments/dryrun/.
+
+    compute term    = FLOPs / (chips * 197e12)        [bf16 peak, v5e]
+    memory term     = HBM bytes / (chips * 819e9)
+    collective term = wire bytes / (chips * 50e9)     [per ICI link]
+
+FLOPs: XLA's cost_analysis counts while-loop bodies once (verified probe,
+EXPERIMENTS.md §Dry-run), so the compute term uses the analytic
+matmul-level model (repro.analysis.flops) with trip counts applied; the
+measured number and the measured/analytic-at-trip-1 consistency ratio are
+reported alongside.  Collective bytes: collectives outside the layer scan
+(the gossip permutes, the paper's contribution) are measured exactly;
+in-scan collectives are scaled by the block trip count (documented
+approximation).  Memory term: analytic parameter/optimizer/cache/
+activation traffic model (lower bound).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+
+from repro.analysis.flops import (forward_flops, model_flops, param_counts,
+                                  train_flops)
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.launch.shapes import INPUT_SHAPES, config_for_shape, text_len
+from repro.models.frontends import AUDIO_FRAMES
+
+from .common import emit
+
+CHIPS = 256
+
+
+def analytic_flops(cfg, shape_name, *, trip_counts=True):
+    info = INPUT_SHAPES[shape_name]
+    t = text_len(cfg, info["seq"])
+    enc_T = AUDIO_FRAMES if cfg.encoder is not None else 0
+    if info["kind"] == "train":
+        return train_flops(cfg, global_batch=info["global_batch"],
+                           seq=info["seq"], trip_counts=trip_counts,
+                           enc_T=enc_T, text_T=t).flops
+    if info["kind"] == "prefill":
+        return forward_flops(cfg, batch=info["global_batch"], T=t,
+                             trip_counts=trip_counts, enc_T=enc_T).flops
+    return forward_flops(cfg, batch=info["global_batch"], T=1,
+                         S=info["seq"], decode=True,
+                         trip_counts=trip_counts).flops
+
+
+def analytic_hbm_bytes(cfg, shape_name) -> float:
+    """Global HBM traffic per step (lower-bound model, bytes)."""
+    info = INPUT_SHAPES[shape_name]
+    pc = param_counts(cfg)
+    pbytes = pc["total"] * 2                      # bf16
+    t = text_len(cfg, info["seq"])
+    tokens = info["global_batch"] * t
+    act = tokens * cfg.d_model * 2
+    L = cfg.num_layers + (cfg.encoder.num_layers if cfg.encoder else 0)
+    if info["kind"] == "train":
+        # weights: fwd + bwd + remat reads + grad write/read + update RW
+        # + momentum RW (all bf16)
+        w = 6 * pbytes
+        a = 6 * act * L                           # saved + recomputed acts
+        return w + a
+    if info["kind"] == "prefill":
+        cache = _cache_bytes(cfg, info["global_batch"], info["seq"])
+        return pbytes + 4 * act * L + cache
+    cache = _cache_bytes(cfg, info["global_batch"], info["seq"])
+    return pbytes * (pc["active"] / pc["total"]) + cache
+
+
+def _cache_bytes(cfg, batch, seq) -> float:
+    per_tok = 0
+    specs = list(cfg.prologue) + list(cfg.pattern) * cfg.num_blocks
+    for s in specs:
+        if s.kind == "mamba":
+            continue
+        if cfg.mla is not None:
+            per_tok += (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim) * 2
+        else:
+            per_tok += 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    state = 0
+    if cfg.ssm is not None:
+        n_m = sum(1 for s in specs if s.kind == "mamba")
+        state = n_m * batch * (
+            cfg.ssm.nheads(cfg.d_model) * cfg.ssm.headdim * cfg.ssm.d_state
+            * 4 + (cfg.ssm.d_conv - 1) *
+            (cfg.ssm.d_inner(cfg.d_model) + 2 * cfg.ssm.d_state) * 2)
+    return batch * seq * per_tok + state
+
+
+def corrected_wire_bytes(rec: dict, cfg) -> float:
+    """Per-device wire bytes with in-scan collectives scaled by the block
+    trip count (collectives in the ENTRY computation — gossip, loss —
+    measured exactly; everything else assumed inside the layer scan)."""
+    colls = rec.get("collectives", {})
+    total = rec.get("collective_wire_bytes", 0.0)
+    entry = rec.get("entry_wire_bytes")
+    if entry is None:
+        # conservative: assume gossip (outside scan) dominates for train,
+        # scale the rest by num_blocks
+        return total  # refined per-pair during hillclimb
+    return entry + (total - entry) * cfg.num_blocks
+
+
+def _lever(r: dict) -> str:
+    """One sentence per pair: what would move the dominant term down."""
+    arch, shape, dom = r["arch"], r["shape"], r["dominant"]
+    if dom == "compute":
+        waste = 1.0 - min(r["useful_ratio"], 1.0)
+        return (f"compute-bound: {waste:.0%} of analytic FLOPs are "
+                f"remat/dispatch overhead — selective remat + capacity "
+                f"tuning; otherwise more chips")
+    if dom == "memory":
+        if "decode" in shape or "500k" in shape:
+            return ("cache-stream-bound: quantize KV (int8), MLA-style "
+                    "latent caches, rolling-window caches for local "
+                    "layers, append-free step (§Perf A2)")
+        return "HBM-bound: fuse updates (fused_dsgd kernel), bf16 opt state"
+    if arch.startswith("deepseek") or arch.startswith("grok") \
+            or arch.startswith("jamba"):
+        return ("collective-bound: MoE dispatch gathers — ragged "
+                "all-to-all dispatch; Megatron-2D weights (§Perf B2)")
+    return ("collective-bound: TP activation all-reduces — narrower "
+            "model axis / comm-compute overlap (§Perf C1-C3)")
+
+
+def run(dryrun_dir: str = "experiments/dryrun",
+        out_md: str = "experiments/roofline.md") -> dict:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*_single.json"))):
+        rec = json.load(open(f))
+        if rec["status"] != "ok":
+            if rec["status"] == "skipped":
+                rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                             "skip": rec["reason"]})
+            continue
+        if rec.get("topology", "base") != "base" or "_flat" in f:
+            continue
+        cfg = config_for_shape(get_config(rec["arch"]), rec["shape"])
+        info = INPUT_SHAPES[rec["shape"]]
+        ana = analytic_flops(cfg, rec["shape"])
+        ana1 = analytic_flops(cfg, rec["shape"], trip_counts=False)
+        meas = rec["flops"] * CHIPS
+        hbm = analytic_hbm_bytes(cfg, rec["shape"])
+        wire = corrected_wire_bytes(rec, cfg)
+        mf = model_flops(cfg, kind=info["kind"],
+                         global_batch=info["global_batch"],
+                         seq=info["seq"],
+                         text_T=text_len(cfg, info["seq"]))
+        t_c = ana / CHIPS / PEAK_FLOPS_BF16
+        t_m = hbm / CHIPS / HBM_BW
+        t_x = wire / ICI_BW_PER_LINK
+        dom = max(("compute", t_c), ("memory", t_m),
+                  ("collective", t_x), key=lambda kv: kv[1])[0]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom,
+            "model_flops": mf, "hlo_flops_analytic": ana,
+            "useful_ratio": mf / ana,
+            "measured_flops_dev": rec["flops"],
+            "consistency_meas_vs_trip1": meas / ana1,
+            "wire_bytes_dev": wire,
+            "memory_per_dev": rec.get("memory", {}),
+        })
+    # emit CSV + markdown
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO | meas/trip1 | lever |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"SKIP | — | — | — |")
+            continue
+        lever = _lever(r)
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"tc={r['t_compute_s']:.3e};tm={r['t_memory_s']:.3e};"
+             f"tx={r['t_collective_s']:.3e};dom={r['dominant']};"
+             f"useful={r['useful_ratio']:.2f}")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['consistency_meas_vs_trip1']:.2f} | {lever} |")
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
+    with open(out_md, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    return {"rows": rows}

@@ -1,0 +1,55 @@
+"""Benchmark runner — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only consensus,length,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Suites:
+    consensus      — paper Fig. 1/6/21/23 (consensus rate)
+    length         — paper Fig. 5/20 + Theorem 1 (schedule length)
+    comm_cost      — paper Table 1/2 (degree / bytes / consensus rate)
+    dsgd_hetero    — paper Fig. 7/8 (DSGD, Dirichlet heterogeneity)
+    robust_methods — paper Fig. 9 (D^2 / QG-DSGDm / GT)
+    roofline       — §Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--steps", type=int, default=300,
+                    help="training steps for the learning benchmarks")
+    args = ap.parse_args()
+
+    from . import (comm_cost, consensus, dsgd_hetero, length, precision,
+                   robust_methods, roofline)
+    suites = {
+        "consensus": consensus.run,
+        "length": length.run,
+        "comm_cost": comm_cost.run,
+        "dsgd_hetero": lambda: dsgd_hetero.run(steps=args.steps),
+        "robust_methods": lambda: robust_methods.run(steps=args.steps),
+        "precision": precision.run,
+        "roofline": roofline.run,
+    }
+    names = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for n in names:
+        try:
+            suites[n]()
+        except Exception:
+            failed.append(n)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: build a Base-(k+1) graph, verify finite-time consensus,
+and run a 30-second decentralized training demo on synthetic data.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_mlp import MLPConfig
+from repro.core.graphs import build_topology
+from repro.core.mixing import consensus_error_curve
+from repro.data.synthetic import dirichlet_classification
+from repro.models import mlp
+from repro.optim.decentralized import make_method
+from repro.sim.engine import simulate_decentralized
+
+
+def main():
+    # --- 1. the paper's object: a finite-time convergent schedule -------
+    n, k = 21, 2
+    sched = build_topology("base", n, k)
+    print(f"Base-{k + 1} graph, n={n}: {len(sched)} rounds, "
+          f"max degree {sched.max_degree} "
+          f"(bound 2*log_{k + 1}({n})+2 = "
+          f"{2 * np.log(n) / np.log(k + 1) + 2:.1f})")
+    errs = consensus_error_curve(sched, len(sched), seed=0, d=8)
+    for r, e in enumerate(errs):
+        bar = "#" * max(0, int(40 + 2 * np.log10(max(e, 1e-40))))
+        print(f"  round {r:2d}  consensus err {e:10.3e}  {bar}")
+    print("  -> exact consensus after the finite schedule. Compare ring:")
+    ring = consensus_error_curve(build_topology("ring", n), len(sched),
+                                 seed=0, d=8)
+    print(f"  ring error after {len(sched)} rounds: {ring[-1]:.3e}")
+
+    # --- 2. decentralized training under data heterogeneity -------------
+    cfg = MLPConfig(input_dim=32, hidden=(64,), num_classes=10)
+    data = dirichlet_classification(n, 256, dim=32, num_classes=10,
+                                    alpha=0.1, margin=1.5, seed=0)
+    params = mlp.init(cfg, jax.random.PRNGKey(0))
+
+    def batches(step, bs=32):
+        i = (step * bs) % (256 - bs)
+        return (jnp.asarray(data.node_x[:, i:i + bs]),
+                jnp.asarray(data.node_y[:, i:i + bs]))
+
+    def eval_fn(p):
+        return mlp.accuracy(p, jnp.asarray(data.test_x),
+                            jnp.asarray(data.test_y))
+
+    print(f"\nDSGD-momentum, n={n} nodes, Dirichlet alpha=0.1:")
+    for name, kk in (("base", 2), ("exp", None), ("ring", None)):
+        s = build_topology(name, n, kk)
+        res = simulate_decentralized(
+            loss_fn=mlp.loss_fn, params=params, method=make_method("dsgdm"),
+            schedule=s, batches=batches, steps=150, eta=0.03,
+            eval_fn=eval_fn, eval_every=149)
+        print(f"  {name + (f'-k{kk}' if kk else ''):10s} "
+              f"maxdeg={s.max_degree}  acc={res.test_acc[-1]:.3f}  "
+              f"consensus={res.consensus[-1]:.2e}")
+
+
+if __name__ == "__main__":
+    main()

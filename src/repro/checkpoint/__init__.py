@@ -1,0 +1,1 @@
+from .io import load_pytree, save_pytree

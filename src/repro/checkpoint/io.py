@@ -1,0 +1,48 @@
+"""Minimal host-local checkpointing: pytree <-> .npz with path-flattened
+keys.  In multi-host deployment each host saves its addressable shards
+(path includes the process index); restore reassembles per-host.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(tree, directory: str, name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    path = os.path.join(
+        directory, f"{name}-p{jax.process_index()}.npz")
+    np.savez(path, **flat)
+    with open(os.path.join(directory, f"{name}.treedef"), "w") as f:
+        f.write(str(treedef))
+    return path
+
+
+def load_pytree(template, directory: str, name: str = "ckpt"):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    path = os.path.join(directory, f"{name}-p{jax.process_index()}.npz")
+    data = np.load(path)
+    flat_t = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for pth, leaf in flat_t[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pth)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_t[1], leaves)

@@ -1,0 +1,30 @@
+"""Architecture registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+import importlib
+
+from .common import ArchConfig, EncoderConfig, LayerSpec, MLAConfig
+
+_MODULES = {
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "granite-8b": "granite_8b",
+    "qwen1.5-4b": "qwen15_4b",
+    "gemma2-2b": "gemma2_2b",
+    "mamba2-2.7b": "mamba2_27b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "grok-1-314b": "grok_1_314b",
+    "llava-next-34b": "llava_next_34b",
+    "gemma3-1b": "gemma3_1b",
+    "jamba-1.5-large-398b": "jamba_15_large_398b",
+    "paper-mlp": "paper_mlp",
+}
+
+ARCH_NAMES = tuple(n for n in _MODULES if n != "paper-mlp")
+
+
+def get_config(name: str) -> ArchConfig:
+    key = name.replace("_", "-") if name not in _MODULES else name
+    if key not in _MODULES:
+        key = name
+    mod = importlib.import_module(f"repro.configs.{_MODULES[key]}")
+    return mod.CONFIG

@@ -1,0 +1,18 @@
+"""The paper's own workload proxy: a small MLP classifier used by the
+decentralized-learning benchmarks (Sec. 6.2 reproduction on synthetic
+Dirichlet-heterogeneous data; LeNet/VGG + CIFAR are not available in the
+offline container — see DESIGN.md Sec. 7)."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    name: str = "paper-mlp"
+    family: str = "mlp"
+    input_dim: int = 64
+    hidden: tuple = (128, 128)
+    num_classes: int = 10
+    source: str = "paper Sec. 6.2 (LeNet/VGG proxy)"
+
+
+CONFIG = MLPConfig()

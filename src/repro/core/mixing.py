@@ -1,0 +1,70 @@
+"""Verification & evaluation utilities for mixing-matrix schedules.
+
+Convention used throughout the framework (matches paper Eq. (1)):
+    node i's post-gossip value  x_i' = sum_j W[i, j] x_j
+so with node-major stacking X in R^{n x d}:  X' = W @ X.
+
+These implement the paper's Definitions 1-2 checks and the consensus-rate
+experiment of Sec. 6.1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .graphs import TopologySchedule
+
+
+def is_doubly_stochastic(W: np.ndarray, atol: float = 1e-9) -> bool:
+    n = W.shape[0]
+    ones = np.ones(n)
+    return (
+        bool((W >= -atol).all())
+        and np.allclose(W @ ones, ones, atol=atol)
+        and np.allclose(W.T @ ones, ones, atol=atol)
+    )
+
+
+def schedule_product(sched: TopologySchedule) -> np.ndarray:
+    """Product of mixing matrices in application order:
+    X_m = W^(m) ... W^(1) X_0."""
+    P = np.eye(sched.n)
+    for W in sched.Ws:
+        P = W @ P
+    return P
+
+
+def is_finite_time_convergent(sched: TopologySchedule,
+                              atol: float = 1e-8) -> bool:
+    """Definition 2: applying the full schedule averages any X exactly
+    <=> the ordered product equals (1/n) 1 1^T."""
+    n = sched.n
+    P = schedule_product(sched)
+    return bool(np.allclose(P, np.full((n, n), 1.0 / n), atol=atol))
+
+
+def consensus_error_curve(sched: TopologySchedule, iters: int,
+                          seed: int = 0, d: int = 1) -> np.ndarray:
+    """Paper Sec. 6.1: x_i ~ N(0,1); track (1/n) sum_i ||x_i - xbar||^2 as
+    X <- W X is applied round-robin over the schedule."""
+    rng = np.random.default_rng(seed)
+    n = sched.n
+    X = rng.standard_normal((n, d))
+    errs = np.empty(iters + 1)
+
+    def err(X):
+        xbar = X.mean(axis=0, keepdims=True)
+        return float(((X - xbar) ** 2).sum(axis=1).mean())
+
+    errs[0] = err(X)
+    for r in range(iters):
+        X = sched.W(r) @ X
+        errs[r + 1] = err(X)
+    return errs
+
+
+def spectral_consensus_rate(W: np.ndarray) -> float:
+    """beta for a static topology: largest singular value of
+    W - (1/n) 1 1^T (paper Definition 1)."""
+    n = W.shape[0]
+    M = W - np.full((n, n), 1.0 / n)
+    return float(np.linalg.svd(M, compute_uv=False)[0])

@@ -1,0 +1,2 @@
+from .synthetic import (dirichlet_classification, token_batches,
+                        HeteroDataset)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused DSGD-momentum update.
+
+Computes, per parameter tile resident once in VMEM:
+
+    u' = beta * u + g                (heavy-ball momentum, paper Sec. 6.2)
+    x' = pre_scale * (x - eta * u')  (SGD step, pre-scaled by the gossip
+                                      self-weight so the subsequent mixing
+                                      round skips one full HBM pass)
+
+Unfused this is 3 reads + 2 writes *per op* (momentum, axpy, scale) = 8+
+HBM streams; fused it is 3 reads + 2 writes total.  With ~1-16 GB of
+parameters per chip this update is strictly memory-bound, so the ~1.6x
+stream reduction is a direct wall-clock win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_dsgd_kernel(s_ref, x_ref, u_ref, g_ref, x_out, u_out):
+    beta, eta, pre = s_ref[0], s_ref[1], s_ref[2]
+    u_new = beta * u_ref[...].astype(jnp.float32) \
+        + g_ref[...].astype(jnp.float32)
+    x_new = pre * (x_ref[...].astype(jnp.float32) - eta * u_new)
+    u_out[...] = u_new.astype(u_out.dtype)
+    x_out[...] = x_new.astype(x_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c",
+                                             "interpret"))
+def fused_dsgd_pallas(x: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
+                      beta: float, eta: float, pre_scale: float = 1.0,
+                      *, block_r: int = 256, block_c: int = 512,
+                      interpret: bool = False
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x, u, g: (R, C) -> (x', u')."""
+    R, C = x.shape
+    block_r = min(block_r, R)
+    block_c = min(block_c, C)
+    grid = (pl.cdiv(R, block_r), pl.cdiv(C, block_c))
+    scalars = jnp.asarray([beta, eta, pre_scale], dtype=jnp.float32)
+    spec = pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _fused_dsgd_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((3,), lambda i, j: (0,)), spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((R, C), x.dtype),
+                   jax.ShapeDtypeStruct((R, C), u.dtype)],
+        interpret=interpret,
+    )(scalars, x, u, g)

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: fused gossip combine.
+
+The mixing step ``x' = w_self * x + sum_s w_s * recv_s`` is the inner loop
+of every DSGD round.  Unfused, XLA materialises S intermediate arrays and
+re-reads HBM S times; this kernel streams one (R, C) tile of every buffer
+through VMEM once and writes the combined tile, i.e. (S+1)+1 HBM streams
+total, the roofline minimum.
+
+Tiling: blocks of (block_r, block_c) with block_c a multiple of 128 (lane
+width) and block_r a multiple of 8 (sublane) — float32 layout; the slot
+count S is small (<= k+1 <= 9 for every production topology) so the whole
+(S, block_r, block_c) stack fits comfortably in VMEM
+(e.g. 8 x 256 x 512 x 4B = 4 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gossip_mix_kernel(w_ref, bufs_ref, out_ref):
+    # bufs_ref: (S, block_r, block_c) in VMEM; w_ref: (S,) in VMEM/SMEM.
+    s = bufs_ref.shape[0]
+    acc = w_ref[0] * bufs_ref[0].astype(jnp.float32)
+    for i in range(1, s):  # S is static and tiny -> unrolled
+        acc += w_ref[i] * bufs_ref[i].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c",
+                                             "interpret"))
+def gossip_mix_pallas(bufs: jnp.ndarray, weights: jnp.ndarray,
+                      *, block_r: int = 256, block_c: int = 512,
+                      interpret: bool = False) -> jnp.ndarray:
+    """bufs: (S, R, C); weights: (S,) -> (R, C) weighted sum."""
+    S, R, C = bufs.shape
+    block_r = min(block_r, R)
+    block_c = min(block_c, C)
+    grid = (pl.cdiv(R, block_r), pl.cdiv(C, block_c))
+    return pl.pallas_call(
+        _gossip_mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((S,), lambda i, j: (0,)),
+            pl.BlockSpec((S, block_r, block_c), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), bufs.dtype),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), bufs)

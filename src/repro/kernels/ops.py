@@ -1,0 +1,56 @@
+"""Public kernel entry points with backend dispatch.
+
+On TPU the Pallas kernels run natively; on CPU (this container, the
+simulation engine, and the dry-run lowering) the pure-jnp references are
+used so that every jit/lower path works on any backend.  Set
+``repro.kernels.ops.FORCE_PALLAS_INTERPRET = True`` to route through the
+Pallas kernels in interpret mode (tests do this explicitly instead).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .fused_dsgd import fused_dsgd_pallas
+from .gossip_mix import gossip_mix_pallas
+
+FORCE_PALLAS_INTERPRET = False
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu" or FORCE_PALLAS_INTERPRET
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def gossip_mix(bufs: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """(S, R, C), (S,) -> (R, C) fused weighted combine."""
+    if _use_pallas() and bufs.ndim == 3 and bufs.shape[1] % 8 == 0 \
+            and bufs.shape[2] % 128 == 0:
+        return gossip_mix_pallas(bufs, weights, interpret=_interp())
+    return ref.gossip_mix_ref(bufs, weights)
+
+
+def fused_dsgd_step(x, u, g, beta: float, eta: float, pre_scale: float = 1.0):
+    if _use_pallas() and x.ndim == 2 and x.shape[0] % 8 == 0 \
+            and x.shape[1] % 128 == 0:
+        return fused_dsgd_pallas(x, u, g, beta, eta, pre_scale,
+                                 interpret=_interp())
+    return ref.fused_dsgd_ref(x, u, g, beta, eta, pre_scale)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    softcap=None, scale=None):
+    """(B, H, Tq, D) x (B, H, Tk, D)^2 -> (B, H, Tq, D)."""
+    Tq, Tk = q.shape[2], k.shape[2]
+    if _use_pallas() and Tq % 128 == 0 and Tk % 128 == 0 \
+            and q.shape[3] % 128 == 0:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      softcap=softcap, scale=scale,
+                                      interpret=_interp())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantic ground truth; the Pallas kernels are validated
+against them over shape/dtype sweeps in ``tests/test_kernels.py``, and the
+CPU execution path (simulation engine, dry-run lowering) uses them
+directly via ``ops.py`` dispatch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gossip_mix_ref(bufs: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted combine of self + received neighbour buffers.
+
+    bufs:    (S, R, C) — slot 0 is the node's own parameters, slots 1..S-1
+             are buffers received via collective-permute.
+    weights: (S,)      — w_self followed by receive weights.
+    returns  (R, C)    — sum_s weights[s] * bufs[s].
+    """
+    w = weights.astype(jnp.float32).reshape(-1, 1, 1)
+    return jnp.sum(w * bufs.astype(jnp.float32), axis=0).astype(bufs.dtype)
+
+
+def fused_dsgd_ref(x: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
+                   beta: float, eta: float, pre_scale: float = 1.0
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused heavy-ball momentum + SGD step (+ optional gossip self-weight
+    pre-scale so the subsequent mix can skip one full HBM pass):
+
+        u' = beta * u + g
+        x' = pre_scale * (x - eta * u')
+    """
+    xf, uf, gf = (a.astype(jnp.float32) for a in (x, u, g))
+    u_new = beta * uf + gf
+    x_new = pre_scale * (xf - eta * u_new)
+    return x_new.astype(x.dtype), u_new.astype(u.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True,
+                        window: int | None = None,
+                        softcap: float | None = None,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Plain-softmax attention oracle.
+
+    q: (B, H, Tq, D);  k, v: (B, H, Tk, D) — callers handling GQA broadcast
+    the kv heads before the call.  ``window`` is a sliding-window width: key
+    j attends to query i iff i - window < j <= i (when causal).
+    """
+    B, H, Tq, D = q.shape
+    Tk = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qi = jnp.arange(Tq)[:, None] + (Tk - Tq)  # align last q to last k
+    kj = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= kj > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = _softmax(logits)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # rows that are fully masked
+    e = jnp.exp(logits - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    return e / jnp.maximum(s, 1e-30)

@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry run (assignment deliverable e).
+
+For every (architecture x input shape x mesh) combination:
+``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must succeed on the
+16x16 single-pod mesh AND the 2x16x16 multi-pod mesh.  No arrays are ever
+allocated — parameters, optimizer state, batches and KV caches are all
+ShapeDtypeStructs.  The compiled artifact yields memory_analysis (fits?),
+cost_analysis (FLOPs/bytes) and the post-SPMD HLO (collective bytes) that
+feed EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k \
+        --mesh single --topology base --k 1 --out experiments/dryrun
+    python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.dist.steps import (make_decode_step, make_prefill,
+                              make_train_step, node_stack_specs)
+from repro.dist.sharding import make_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (INPUT_SHAPES, config_for_shape,
+                                 decode_inputs, prefill_batch_shapes,
+                                 skip_reason, train_batch_shapes)
+from repro.models import model as M
+from repro.optim.decentralized import make_method
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f64": 8,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def parse_collectives(hlo_text: str) -> tuple[dict, dict]:
+    """Sum result-shape bytes per collective kind from post-SPMD HLO,
+    split into (all, entry-computation-only).  Collectives inside while
+    bodies (layer scan etc.) execute trip-count times but appear once;
+    the entry split lets the roofline scale them separately.
+    (Wire-bytes approximation documented in EXPERIMENTS.md.)"""
+    out: dict[str, dict] = {}
+    entry: dict[str, dict] = {}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY "):
+            in_entry = True
+        elif ls.startswith("}") and not line.startswith(" "):
+            in_entry = False
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(2), m.group(3), m.group(4)
+        if dtype == "tuple":
+            continue
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        for table in ((out, entry) if in_entry else (out,)):
+            rec = table.setdefault(kind, {"count": 0, "result_bytes": 0})
+            rec["count"] += 1
+            rec["result_bytes"] += nbytes
+    return out, entry
+
+
+def collective_wire_bytes(colls: dict) -> float:
+    """Wire-bytes-per-device estimate from the parsed table."""
+    total = 0.0
+    for kind, rec in colls.items():
+        b = rec["result_bytes"]
+        if kind == "all-reduce":
+            total += 2 * b
+        elif kind == "all-gather":
+            total += b            # result is the gathered buffer
+        elif kind == "reduce-scatter":
+            total += b
+        else:                     # permute / all-to-all
+            total += b
+    return total
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
+               topology: str = "base", k: int = 1,
+               method: str = "dsgdm", flatten_gossip: bool = False,
+               append_free: bool = False, embed_hint: bool = False,
+               extra_hlo: bool = False) -> dict:
+    cfg0 = get_config(arch)
+    reason = skip_reason(cfg0, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": reason}
+    cfg = config_for_shape(cfg0, shape_name)
+    info = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    if info["kind"] == "train":
+        rules = make_rules(mesh, arch_name=cfg.name, context="train")
+        n_nodes = (mesh.shape[rules.node_axis]
+                   if rules.node_axis is not None else 1)
+        batch = train_batch_shapes(cfg, n_nodes, seq=info["seq"],
+                                   global_batch=info["global_batch"])
+        bundle = make_train_step(cfg, mesh, topology=topology, k=k,
+                                 method_name=method,
+                                 flatten_gossip=flatten_gossip,
+                                 embed_lookup_replicated=embed_hint,
+                                 batch_shapes=batch)
+        p = node_stack_specs(M.param_specs(cfg, jnp.bfloat16), n_nodes)
+        o = jax.eval_shape(make_method(method).init, p)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = bundle.step_fn.lower(p, o, batch, step)
+        meta = {"n_nodes": n_nodes, "n_rounds": bundle.n_rounds,
+                "gossip_axis": rules.node_axis}
+    elif info["kind"] == "prefill":
+        batch = prefill_batch_shapes(cfg, batch=info["global_batch"],
+                                     seq=info["seq"])
+        bundle = make_prefill(cfg, mesh, batch=info["global_batch"],
+                              seq=info["seq"])
+        lowered = bundle.fn(batch).lower(
+            M.param_specs(cfg, jnp.bfloat16), batch)
+        meta = {}
+    else:  # decode
+        B, S = info["global_batch"], info["seq"]
+        cache, tokens, index, enc = decode_inputs(cfg, batch=B, seq=S)
+        bundle = make_decode_step(cfg, mesh, batch=B, seq=S,
+                                  append_free=append_free)
+        args = [M.param_specs(cfg, jnp.bfloat16), cache, tokens, index]
+        if enc is not None:
+            args.append(enc)
+        lowered = bundle.fn.lower(*args)
+        meta = {}
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {a: int(getattr(mem, a)) for a in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes") if hasattr(mem, a)}
+    except Exception as e:  # CPU backend may not support it
+        mem_d = {"error": str(e)}
+    hlo = compiled.as_text()
+    colls, entry_colls = parse_collectives(hlo)
+    res = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok", "topology": topology, "k": k, **meta,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "memory": mem_d,
+        "collectives": colls,
+        "entry_collectives": entry_colls,
+        "collective_wire_bytes": collective_wire_bytes(colls),
+        "entry_wire_bytes": collective_wire_bytes(entry_colls),
+        "hlo_bytes": len(hlo),
+    }
+    if extra_hlo:
+        res["hlo_text"] = hlo
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--topology", default="base")
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--method", default="dsgdm")
+    ap.add_argument("--flatten-gossip", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                if args.topology != "base" or args.flatten_gossip:
+                    tag += f"_{args.topology}k{args.k}" + \
+                        ("_flat" if args.flatten_gossip else "")
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                try:
+                    res = dryrun_one(arch, shape, multi_pod=mp,
+                                     topology=args.topology, k=args.k,
+                                     method=args.method,
+                                     flatten_gossip=args.flatten_gossip)
+                except Exception:
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error",
+                           "traceback": traceback.format_exc()}
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                print(f"[{res['status']}] {tag} "
+                      f"flops={res.get('flops', 0):.3e} "
+                      f"compile={res.get('compile_s', 0)}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Attention: GQA/MQA with RoPE, sliding window, softcap, QK-norm, KV cache.
+
+The core ``sdpa`` uses a memory-bounded pure-jnp streaming softmax (scan
+over query chunks) so that lowering on any backend never materialises the
+full (T, S) logits for long sequences; on TPU the Pallas flash kernel in
+``repro.kernels`` replaces it via ``ops.flash_attention`` dispatch when
+shapes align.  Decode (Tq == 1) takes a direct einsum path that keeps the
+reduction over the (possibly sequence-sharded) cache axis — GSPMD turns
+that into partial max/sum + small all-reduces (LSE-combine), which is how
+``long_500k`` serves with the KV cache sharded across the data axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, normal_init, rmsnorm, rmsnorm_init, rope
+
+_NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, window: int | None):
+    m = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), dtype=bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m
+
+
+# GQA formulation: "grouped" keeps K/V at KV heads and reshapes Q to
+# (KV, G) groups; "repeat" broadcasts K/V to H heads first so the head dim
+# shards over the model axis.  Measured on the production mesh
+# (EXPERIMENTS.md §Perf iteration A1): with a sequence-sharded KV cache,
+# "repeat" makes GSPMD reshard the whole cache to head sharding every step
+# (+2.1 GB wire/step on granite-8b decode) — hypothesis REFUTED; the
+# grouped form with S-sharded cache + LSE-combine is the right decode
+# layout, so it stays the default.  "repeat" remains available for
+# head-shardable training layouts.
+GQA_MODE = "grouped"
+
+# Append-free decode (no cache write per step; see §Perf iteration A2 and
+# the comment at the use site).  Enabled by the serving step factory via
+# make_decode_step(..., append_free=True); the returned cache is passed
+# through unchanged and appends are the serving loop's batched concern.
+APPEND_FREE_DECODE = False
+
+
+def sdpa_two_piece(q, k_cache, v_cache, k_new, v_new, *, causal=True,
+                   window=None, softcap=None, scale=None, q_positions=None,
+                   k_valid_len=None):
+    """Single-token attention over (frozen cache, fresh token) with
+    streaming-softmax (LSE) combination — no cache mutation.
+
+    q: (B, 1, H, hd); cache: (B, S, KV, hd); new: (B, 1, KV, hd)."""
+    B, T, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    qpos = q_positions[0]
+    qg = q.reshape(B, T, KV, G, hd).astype(jnp.float32)
+
+    def piece(k, v, mask):
+        logits = jnp.einsum("btkgd,bskd->btkgs", qg,
+                            k.astype(jnp.float32)) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        logits = jnp.where(mask, logits, _NEG_INF)
+        m = logits.max(axis=-1)
+        p = jnp.exp(logits - m[..., None])
+        l = p.sum(axis=-1)
+        acc = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+        return acc, m, l
+
+    kpos = jnp.arange(S)
+    mask_c = (kpos[None, :] < k_valid_len[:, None])          # (B, S)
+    if window is not None:
+        mask_c = mask_c & (kpos[None, :] > qpos - window)
+    acc1, m1, l1 = piece(k_cache, v_cache,
+                         mask_c[:, None, None, None, :])
+    ones = jnp.ones((B, 1, 1, 1, 1), bool)                   # self-attend
+    acc2, m2, l2 = piece(k_new, v_new, ones)
+
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    out = (acc1 * a1[..., None] + acc2 * a2[..., None]) / \
+        jnp.maximum(l1 * a1 + l2 * a2, 1e-30)[..., None]
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def sdpa(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
+         q_positions=None, k_valid_len=None, q_chunk=1024,
+         gqa_mode=None):
+    """Grouped-query attention.
+
+    q: (B, Tq, H, hd);  k, v: (B, S, KV, hd) with H % KV == 0.
+    q_positions: (Tq,) absolute positions of the queries (defaults to
+    S - Tq + arange(Tq)).  k_valid_len: (B,) number of valid cache entries
+    (for decode against a partially filled cache)."""
+    B, Tq, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    if (gqa_mode or GQA_MODE) == "repeat" and KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+        KV = H
+    hd_v = v.shape[-1]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    if q_positions is None:
+        q_positions = jnp.arange(Tq) + (S - Tq)
+    kpos = jnp.arange(S)
+
+    qg = q.reshape(B, Tq, KV, G, hd)
+
+    def block(qi, qpos_i):
+        # qi: (B, t, KV, G, hd) -> out (B, t, KV, G, hd)
+        logits = jnp.einsum("btkgd,bskd->btkgs", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        m = _mask(qpos_i[:, None], kpos[None, :], causal, window)
+        m = m[None, :, None, None, :]               # (1, t, 1, 1, S)
+        if k_valid_len is not None:
+            valid = kpos[None, :] < k_valid_len[:, None]      # (B, S)
+            m = m & valid[:, None, None, None, :]
+        logits = jnp.where(m, logits, _NEG_INF)
+        mx = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp(logits - mx)
+        out = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+        den = jnp.maximum(p.sum(-1), 1e-30)
+        return out / den[..., None]
+
+    if Tq <= q_chunk:
+        out = block(qg, q_positions)
+    else:
+        assert Tq % q_chunk == 0
+        nq = Tq // q_chunk
+        qs = qg.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_positions.reshape(nq, q_chunk)
+        out = jax.lax.map(lambda t: block(*t), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, KV, G, hd_v)
+    return out.reshape(B, Tq, H, hd_v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention layer
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model, n_heads, n_kv, head_dim, dtype, *,
+              qkv_bias=False, qk_norm=False) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype, qkv_bias),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype, qkv_bias),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype, qkv_bias),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def attn_apply(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
+               causal=True, window=None, softcap=None, scale=None,
+               cache=None, cache_index=None, positions=None,
+               kv_override=None):
+    """x: (B, T, D).  With ``cache`` (dict k/v (B, S, KV, hd)) performs a
+    decode/prefill update at ``cache_index``.  ``kv_override`` supplies
+    external K/V inputs (cross-attention)."""
+    B, T, D = x.shape
+    q = dense(p["wq"], x).reshape(B, T, n_heads, head_dim)
+    if kv_override is None:
+        xk = dense(p["wk"], x).reshape(B, T, n_kv, head_dim)
+        xv = dense(p["wv"], x).reshape(B, T, n_kv, head_dim)
+    else:
+        src = kv_override  # (B, S_src, D)
+        xk = dense(p["wk"], src).reshape(B, src.shape[1], n_kv, head_dim)
+        xv = dense(p["wv"], src).reshape(B, src.shape[1], n_kv, head_dim)
+
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        xk = rmsnorm(p["k_norm"], xk)
+
+    if positions is None:
+        pos0 = 0 if cache_index is None else cache_index
+        positions = pos0 + jnp.arange(T)
+    if kv_override is None and rope_theta is not None:
+        q = rope(q, positions, rope_theta)
+        xk = rope(xk, positions, rope_theta)
+
+    k_valid = None
+    if cache is not None:
+        if kv_override is None and APPEND_FREE_DECODE and T == 1:
+            # Append-free serve step (EXPERIMENTS.md §Perf iteration A2):
+            # with a sequence-sharded cache, dynamic-update-slice at a
+            # traced index lowers to a full-cache select (GSPMD can't
+            # in-place-update across shards) — a whole-cache read+write
+            # every token.  Real serving batches appends (paged caches);
+            # here the step attends over the frozen cache [0, index) and
+            # the fresh token's own K/V, LSE-combined, writing nothing.
+            k, v = cache["k"], cache["v"]
+            k_valid = jnp.full((B,), cache_index, dtype=jnp.int32)
+            out_cache = sdpa_two_piece(
+                q, k, v, xk, xv, causal=causal, window=window,
+                softcap=softcap, scale=scale, q_positions=positions,
+                k_valid_len=k_valid)
+            y = dense(p["wo"], out_cache.reshape(B, T, n_heads * head_dim))
+            return y, cache
+        if kv_override is None:
+            k = jax.lax.dynamic_update_slice_in_dim(cache["k"], xk,
+                                                    cache_index, axis=1)
+            v = jax.lax.dynamic_update_slice_in_dim(cache["v"], xv,
+                                                    cache_index, axis=1)
+            cache = {"k": k, "v": v}
+            k_valid = jnp.full((B,), cache_index + T, dtype=jnp.int32)
+            qpos = positions
+        else:
+            k, v = cache["k"], cache["v"]  # precomputed cross KV
+            qpos = positions
+        out = sdpa(q, k, v, causal=causal and kv_override is None,
+                   window=window, softcap=softcap, scale=scale,
+                   q_positions=qpos, k_valid_len=k_valid)
+    else:
+        out = sdpa(q, xk, xv, causal=causal, window=window, softcap=softcap,
+                   scale=scale,
+                   q_positions=positions if kv_override is None else None)
+        cache = None
+    y = dense(p["wo"], out.reshape(B, T, n_heads * head_dim))
+    return y, cache

@@ -1,0 +1,208 @@
+"""Layer / block composition: (prologue, pattern x num_blocks) with the
+repeated pattern executed as ``lax.scan`` over stacked parameters."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig, LayerSpec
+
+from .attention import attn_apply, attn_init
+from .layers import mlp, mlp_init, rmsnorm, rmsnorm_init
+from .mamba2 import mamba_apply, mamba_cache_init, mamba_init
+from .mla import mla_apply, mla_init
+from .moe import moe_apply, moe_init
+
+
+# ---------------------------------------------------------------------------
+# single layer
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: ArchConfig, spec: LayerSpec, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            p["attn"] = mla_init(ks[0], cfg.d_model, cfg.num_heads, dtype,
+                                 **_mla_kw(cfg))
+        else:
+            p["attn"] = attn_init(ks[0], cfg.d_model, cfg.num_heads,
+                                  cfg.num_kv_heads, cfg.head_dim, dtype,
+                                  qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+        if cfg.post_norm:
+            p["ln1_post"] = rmsnorm_init(cfg.d_model, dtype)
+    else:  # mamba
+        p["mamba"] = mamba_init(ks[0], cfg.d_model, cfg.ssm, dtype)
+    if spec.cross_attn:
+        p["ln_x"] = rmsnorm_init(cfg.d_model, dtype)
+        p["cross"] = attn_init(ks[1], cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.head_dim, dtype)
+    if spec.ffn != "none":
+        p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+        if spec.ffn == "moe":
+            p["moe"] = moe_init(ks[2], cfg.d_model, cfg.moe, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype)
+        if cfg.post_norm:
+            p["ln2_post"] = rmsnorm_init(cfg.d_model, dtype)
+    return p
+
+
+def _mla_kw(cfg: ArchConfig) -> dict:
+    m = cfg.mla
+    return dict(q_lora_rank=m.q_lora_rank, kv_lora_rank=m.kv_lora_rank,
+                qk_nope_dim=m.qk_nope_dim, qk_rope_dim=m.qk_rope_dim,
+                v_head_dim=m.v_head_dim)
+
+
+def layer_apply(p: dict, x, cfg: ArchConfig, spec: LayerSpec, *,
+                cache=None, cache_index=None, enc_out=None, causal=True):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = rmsnorm(p["ln1"], x)
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            a, cache_a = mla_apply(
+                p["attn"], h, n_heads=cfg.num_heads,
+                rope_theta=spec.rope_theta, cache=_sub(cache, "attn"),
+                cache_index=cache_index, softcap=cfg.attn_softcap,
+                **_mla_kw(cfg))
+        else:
+            a, cache_a = attn_apply(
+                p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=spec.rope_theta,
+                causal=causal, window=spec.window, softcap=cfg.attn_softcap,
+                scale=cfg.attn_scale, cache=_sub(cache, "attn"),
+                cache_index=cache_index)
+        if "ln1_post" in p:
+            a = rmsnorm(p["ln1_post"], a)
+        new_cache = {"attn": cache_a} if cache_a is not None else {}
+    else:
+        a, cache_m = mamba_apply(p["mamba"], h, cfg.ssm,
+                                 cache=_sub(cache, "mamba"))
+        new_cache = {"mamba": cache_m} if cache_m is not None else {}
+    x = x + a
+
+    if spec.cross_attn:
+        # cross-attention K/V are recomputed from enc_out each call (the
+        # encoder output is part of the serve state; caching the projected
+        # K/V is a memory/compute trade documented in DESIGN.md).
+        hx = rmsnorm(p["ln_x"], x)
+        cx, _ = attn_apply(
+            p["cross"], hx, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=None, causal=False,
+            kv_override=enc_out)
+        x = x + cx
+
+    if spec.ffn != "none":
+        h2 = rmsnorm(p["ln2"], x)
+        if spec.ffn == "moe":
+            f, aux = moe_apply(p["moe"], h2, cfg.moe, cfg.mlp_act)
+        else:
+            f = mlp(p["mlp"], h2, cfg.mlp_act)
+        if "ln2_post" in p:
+            f = rmsnorm(p["ln2_post"], f)
+        x = x + f
+    return x, new_cache, aux
+
+
+def _sub(cache, key):
+    if cache is None:
+        return None
+    return cache.get(key)
+
+
+# ---------------------------------------------------------------------------
+# layer cache
+# ---------------------------------------------------------------------------
+
+def layer_cache_init(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                     max_seq: int, dtype, enc_len: int = 0) -> dict:
+    c: dict = {}
+    if spec.kind == "attn":
+        if cfg.mla is not None:
+            m = cfg.mla
+            c["attn"] = {
+                "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, max_seq, m.qk_rope_dim), dtype),
+            }
+        else:
+            shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+            c["attn"] = {"k": jnp.zeros(shape, dtype),
+                         "v": jnp.zeros(shape, dtype)}
+    else:
+        c["mamba"] = mamba_cache_init(batch, cfg.d_model, cfg.ssm, dtype)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# stack: prologue (unrolled) + pattern blocks (scanned)
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: ArchConfig, dtype) -> dict:
+    kp, kb = jax.random.split(key)
+    pro = [layer_init(k, cfg, s, dtype)
+           for k, s in zip(jax.random.split(kp, max(1, len(cfg.prologue))),
+                           cfg.prologue)]
+    bkeys = jax.random.split(kb, cfg.num_blocks)
+
+    def one_block(k):
+        return [layer_init(kk, cfg, s, dtype)
+                for kk, s in zip(jax.random.split(k, len(cfg.pattern)),
+                                 cfg.pattern)]
+
+    blocks = [one_block(k) for k in bkeys]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return {"prologue": pro, "blocks": stacked}
+
+
+def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
+                cache_index=None, enc_out=None, causal=True, remat=False):
+    """caches: {"prologue": [...], "blocks": stacked-per-block pytree}."""
+    aux_total = jnp.float32(0.0)
+    new_pro_caches = []
+    for i, spec in enumerate(cfg.prologue):
+        c = None if caches is None else caches["prologue"][i]
+        x, nc, aux = layer_apply(params["prologue"][i], x, cfg, spec,
+                                 cache=c, cache_index=cache_index,
+                                 enc_out=enc_out, causal=causal)
+        new_pro_caches.append(nc)
+        aux_total = aux_total + aux
+
+    def block_body(carry, xs):
+        xc, auxc = carry
+        if caches is None:
+            bp = xs
+            bc = [None] * len(cfg.pattern)
+        else:
+            bp, bc = xs
+        new_bc = []
+        for i, spec in enumerate(cfg.pattern):
+            xc, nci, aux_i = layer_apply(bp[i], xc, cfg, spec, cache=bc[i],
+                                         cache_index=cache_index,
+                                         enc_out=enc_out, causal=causal)
+            new_bc.append(nci)
+            auxc = auxc + aux_i
+        return (xc, auxc), new_bc if caches is not None else None
+
+    body = jax.checkpoint(block_body) if remat else block_body
+    xs = params["blocks"] if caches is None \
+        else (params["blocks"], caches["blocks"])
+    (x, aux_total), block_caches = jax.lax.scan(body, (x, aux_total), xs)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"prologue": new_pro_caches, "blocks": block_caches}
+    return x, new_caches, aux_total
+
+
+def stack_cache_init(cfg: ArchConfig, batch: int, max_seq: int, dtype,
+                     enc_len: int = 0) -> dict:
+    pro = [layer_cache_init(cfg, s, batch, max_seq, dtype, enc_len)
+           for s in cfg.prologue]
+    one = [layer_cache_init(cfg, s, batch, max_seq, dtype, enc_len)
+           for s in cfg.pattern]
+    blocks = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_blocks,) + a.shape), one)
+    # materialise (broadcast_to gives a view; make it writable via + 0)
+    blocks = jax.tree.map(lambda a: a + jnp.zeros((), a.dtype), blocks)
+    return {"prologue": pro, "blocks": blocks}

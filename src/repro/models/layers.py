@@ -1,0 +1,128 @@
+"""Primitive layers (functional, params-as-pytrees, pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.zeros((d,), dtype=dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Gemma-style (1 + scale) RMSNorm; zeros-init == identity scale."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear / embedding
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    p = {"w": normal_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": normal_init(key, (vocab, d), dtype)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return p["table"][tokens]
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": dense_init(k1, d, d_ff, dtype),
+            "up": dense_init(k2, d, d_ff, dtype),
+            "down": dense_init(k3, d_ff, d, dtype)}
+
+
+def mlp(p: dict, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    g = dense(p["gate"], x)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return dense(p["down"], g * dense(p["up"], x))
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., T, H, hd) rotated by absolute positions (broadcast (T,) or
+    per-batch (B, T))."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., T, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(h: jnp.ndarray, w_out: jnp.ndarray,
+                    labels: jnp.ndarray, chunk: int = 512,
+                    logit_softcap: float | None = None) -> jnp.ndarray:
+    """Cross-entropy without materialising the full (B, T, V) logits:
+    scan over T-chunks, computing logits per chunk in f32.
+
+    h: (B, T, D); w_out: (D, V); labels: (B, T) with -100 = ignore."""
+    B, T, D = h.shape
+    chunk = min(chunk, T)
+    if T % chunk:  # pad to a multiple (padding labelled ignore)
+        pad = chunk - T % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+        T += pad
+    nc = T // chunk
+    hc = h.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hi, li = xs
+        logits = (hi.astype(jnp.float32) @ w_out.astype(jnp.float32))
+        if logit_softcap is not None:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        valid = li != -100
+        tgt = jnp.where(valid, li, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, lse - gold, 0.0)
+        return (tot + nll.sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1)

@@ -1,0 +1,188 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060), chunked form.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk "attention"
+with cumulative decay + an inter-chunk ``lax.scan`` over chunk states —
+O(T * chunk) work and O(state) memory carried between chunks.  Decode is
+the O(1) recurrent step on the (B, heads, headdim, d_state) state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, normal_init, rmsnorm_init
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    chunk: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def nheads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """x: (b, t, h, p); dt: (b, t, h) (post-softplus); A: (h,) negative;
+    B, C: (b, t, n).  Returns (y: (b, t, h, p), final_state: (b, h, p, n)).
+
+    Recurrence: s_t = exp(dt_t A) s_{t-1} + dt_t B_t x_t;  y_t = C_t . s_t
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, t)
+    assert t % chunk == 0
+    nc = t // chunk
+    xd = (x * dt[..., None]).astype(jnp.float32)
+    dA = (dt * A).astype(jnp.float32)                       # (b, t, h) <= 0
+
+    xd = xd.reshape(b, nc, chunk, h, p).transpose(1, 0, 2, 3, 4)
+    dA = dA.reshape(b, nc, chunk, h).transpose(1, 0, 2, 3)
+    Bc = B.astype(jnp.float32).reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+    Cc = C.astype(jnp.float32).reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), dtype=bool))
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def body(S_prev, inp):
+        xd_c, dA_c, B_c, C_c = inp                   # (b,q,h,p) (b,q,h) ...
+        cs = jnp.cumsum(dA_c, axis=1)                # (b, q, h)
+        total = cs[:, -1]                            # (b, h)
+        # intra-chunk: L[t, j] = exp(cs_t - cs_j) for t >= j
+        L = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (b, t, j, h)
+        L = jnp.where(tri[None, :, :, None], L, 0.0)
+        CB = jnp.einsum("btn,bjn->btj", C_c, B_c)
+        y = jnp.einsum("btj,btjh,bjhp->bthp", CB, L, xd_c)
+        # inter-chunk contribution from carried state
+        y = y + jnp.einsum("btn,bhpn->bthp", C_c, S_prev) \
+            * jnp.exp(cs)[..., None]
+        # new chunk state
+        decay_out = jnp.exp(total[:, None, :] - cs)  # (b, q, h)
+        S_loc = jnp.einsum("bjn,bjhp->bhpn", B_c,
+                           xd_c * decay_out[..., None])
+        S_new = jnp.exp(total)[..., None, None] * S_prev + S_loc
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(body, init_state, (xd, dA, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, p)
+    return y.astype(x.dtype), S_fin
+
+
+def ssd_step(S, x, dt, A, B, C):
+    """One decode step.  S: (b,h,p,n); x: (b,h,p); dt: (b,h); B,C: (b,n)."""
+    Sf = S.astype(jnp.float32)
+    dA = jnp.exp((dt * A).astype(jnp.float32))       # (b, h)
+    S_new = dA[..., None, None] * Sf + jnp.einsum(
+        "bn,bhp->bhpn", B.astype(jnp.float32),
+        (x * dt[..., None]).astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), S_new)
+    return S_new.astype(S.dtype), y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, d_model: int, cfg: SSMConfig, dtype) -> dict:
+    d_in = cfg.d_inner(d_model)
+    h = cfg.nheads(d_model)
+    conv_dim = d_in + 2 * cfg.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d_model,
+                              2 * d_in + 2 * cfg.d_state + h, dtype),
+        "conv_w": normal_init(ks[1], (cfg.d_conv, conv_dim), dtype, 0.1),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), dtype),             # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(ks[2], d_in, d_model, dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B, T, C); w: (K, C); left-padded causal depthwise conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def mamba_apply(p, x, cfg: SSMConfig, cache=None):
+    """x: (B, T, D).  cache = {"conv": (B, K-1, conv_dim),
+    "ssm": (B, h, p, n)}; returns (y, new_cache)."""
+    B_, T, D = x.shape
+    d_in = cfg.d_inner(D)
+    h = cfg.nheads(D)
+    n = cfg.d_state
+    conv_dim = d_in + 2 * n
+
+    proj = dense(p["in_proj"], x)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + conv_dim]
+    dt = proj[..., d_in + conv_dim:]
+
+    new_cache = None
+    if cache is None:
+        xbc = _causal_depthwise_conv(xbc, p["conv_w"], p["conv_b"])
+    else:
+        # rolling conv state (decode: T is typically 1)
+        hist = jnp.concatenate([cache["conv"], xbc], axis=1)
+        xbc = _causal_depthwise_conv(
+            hist, p["conv_w"], p["conv_b"])[:, -T:]
+        conv_new = hist[:, -(cfg.d_conv - 1):]
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(B_, T, h, cfg.headdim)
+    Bm = xbc[..., d_in:d_in + n]
+    Cm = xbc[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if cache is not None and T == 1:
+        S, y = ssd_step(cache["ssm"], xs[:, 0], dt[:, 0], A,
+                        Bm[:, 0], Cm[:, 0])
+        y = y[:, None]
+        new_cache = {"conv": conv_new, "ssm": S}
+    else:
+        init = cache["ssm"] if cache is not None else None
+        y, S = ssd_chunked(xs, dt, A, Bm, Cm, cfg.chunk, init)
+        if cache is not None:
+            new_cache = {"conv": conv_new, "ssm": S.astype(cache["ssm"].dtype)}
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(B_, T, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(var + 1e-6) * (
+        1.0 + p["norm"]["scale"].astype(jnp.float32))
+    return dense(p["out_proj"], g.astype(x.dtype)), new_cache
+
+
+def mamba_cache_init(batch: int, d_model: int, cfg: SSMConfig, dtype):
+    d_in = cfg.d_inner(d_model)
+    h = cfg.nheads(d_model)
+    conv_dim = d_in + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, cfg.headdim, cfg.d_state), jnp.float32),
+    }

@@ -1,0 +1,84 @@
+"""DeepSeek-V3 Multi-head Latent Attention (arXiv:2412.19437).
+
+Queries are produced through a low-rank bottleneck (q_lora_rank); keys and
+values through a shared compressed latent (kv_lora_rank) plus a decoupled
+RoPE key of rope_head_dim shared across heads.  The KV cache stores only
+the compressed latent + rope key — (kv_lora_rank + rope_head_dim) per
+token instead of 2 * n_heads * head_dim — which is what makes the
+decode_32k shape of deepseek-v3-671b fit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import sdpa
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init, rope
+
+
+def mla_init(key, d_model, n_heads, dtype, *, q_lora_rank=1536,
+             kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+             v_head_dim=128) -> dict:
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": dense_init(ks[0], d_model, q_lora_rank, dtype),
+        "q_a_norm": rmsnorm_init(q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], q_lora_rank,
+                           n_heads * (qk_nope_dim + qk_rope_dim), dtype),
+        "wkv_a": dense_init(ks[2], d_model, kv_lora_rank + qk_rope_dim,
+                            dtype),
+        "kv_a_norm": rmsnorm_init(kv_lora_rank, dtype),
+        "wkv_b": dense_init(ks[3], kv_lora_rank,
+                            n_heads * (qk_nope_dim + v_head_dim), dtype),
+        "wo": dense_init(ks[4], n_heads * v_head_dim, d_model, dtype),
+    }
+
+
+def mla_apply(p, x, *, n_heads, q_lora_rank=1536, kv_lora_rank=512,
+              qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+              rope_theta=10000.0, cache=None, cache_index=None,
+              softcap=None):
+    """x: (B, T, D).  cache = {"ckv": (B, S, kv_lora), "krope": (B, S, rope)}.
+    Returns (out, cache)."""
+    B, T, D = x.shape
+    qk_dim = qk_nope_dim + qk_rope_dim
+
+    q = dense(p["wq_b"], rmsnorm(p["q_a_norm"], dense(p["wq_a"], x)))
+    q = q.reshape(B, T, n_heads, qk_dim)
+    q_nope, q_rope = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+
+    kv_a = dense(p["wkv_a"], x)
+    ckv = rmsnorm(p["kv_a_norm"], kv_a[..., :kv_lora_rank])   # (B, T, r)
+    k_rope = kv_a[..., kv_lora_rank:].reshape(B, T, 1, qk_rope_dim)
+
+    pos0 = 0 if cache_index is None else cache_index
+    positions = pos0 + jnp.arange(T)
+    q_rope = rope(q_rope, positions, rope_theta)
+    k_rope = rope(k_rope, positions, rope_theta)
+
+    k_valid = None
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv,
+                                                  cache_index, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope.reshape(B, T, qk_rope_dim),
+            cache_index, axis=1).reshape(B, -1, 1, qk_rope_dim)
+        cache = {"ckv": ckv, "krope": k_rope.reshape(B, -1, qk_rope_dim)}
+        k_valid = jnp.full((B,), cache_index + T, dtype=jnp.int32)
+    S = ckv.shape[1]
+
+    # expand latent to per-head K/V (absorbed form would keep it compressed;
+    # we expand explicitly — the cache, which is the memory bottleneck,
+    # stays compressed either way)
+    kv = dense(p["wkv_b"], ckv).reshape(B, S, n_heads,
+                                        qk_nope_dim + v_head_dim)
+    k_nope, v = kv[..., :qk_nope_dim], kv[..., qk_nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope.reshape(B, S, 1, qk_rope_dim),
+                                  (B, S, n_heads, qk_rope_dim))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    out = sdpa(qf, k, v, causal=True, softcap=softcap,
+               scale=qk_dim ** -0.5,
+               q_positions=positions, k_valid_len=k_valid)
+    return dense(p["wo"], out.reshape(B, T, n_heads * v_head_dim)), cache

@@ -1,0 +1,40 @@
+"""Small MLP classifier (the paper's LeNet/VGG proxy for Sec. 6.2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_mlp import MLPConfig
+
+
+def init(cfg: MLPConfig, key) -> dict:
+    dims = (cfg.input_dim,) + tuple(cfg.hidden) + (cfg.num_classes,)
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"l{i}": {
+            "w": jax.random.normal(ks[i], (dims[i], dims[i + 1])) *
+            (2.0 / dims[i]) ** 0.5,
+            "b": jnp.zeros((dims[i + 1],)),
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    n = len(params)
+    for i in range(n):
+        x = x @ params[f"l{i}"]["w"] + params[f"l{i}"]["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(params: dict, batch: tuple) -> jnp.ndarray:
+    x, y = batch
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+
+
+def accuracy(params: dict, x, y) -> jnp.ndarray:
+    return (apply(params, x).argmax(-1) == y).mean()

@@ -1,0 +1,181 @@
+"""Top-level models: decoder-only LM (dense/MoE/SSM/hybrid/VLM) and
+encoder-decoder (audio backbone).  Functional API:
+
+    params = init(cfg, key, dtype)
+    loss, aux = loss_fn(cfg, params, batch)            # training
+    logits, cache = prefill(cfg, params, batch, max_seq)
+    logits, cache = decode_step(cfg, params, cache, tokens, index)
+
+Batches are dicts: {"tokens", "labels"} (+ "prefix_embeds" for VLM,
++ "frames" for audio enc-dec).  ``input_specs`` in launch/shapes.py builds
+the matching ShapeDtypeStructs for the dry run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.common import ArchConfig, LayerSpec
+
+from .blocks import stack_apply, stack_cache_init, stack_init
+from .layers import (chunked_ce_loss, dense_init, embed, embed_init,
+                     rmsnorm, rmsnorm_init)
+
+
+def _enc_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Encoder stack as an ArchConfig (non-causal, dense FFN)."""
+    from dataclasses import replace
+    spec = LayerSpec(kind="attn", ffn="dense")
+    return replace(cfg, pattern=(spec,), prologue=(),
+                   num_blocks=cfg.encoder.num_layers,
+                   d_ff=cfg.encoder.d_ff, moe=None, mla=None, ssm=None)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "stack": stack_init(ks[1], cfg, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.encoder is not None:
+        p["encoder"] = {
+            "stack": stack_init(ks[3], _enc_cfg(cfg), dtype),
+            "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        }
+    if cfg.mtp:
+        # deepseek-style multi-token prediction: one extra block + shared
+        # embedding head predicting token t+2.
+        from .blocks import layer_init
+        p["mtp"] = {
+            "norm": rmsnorm_init(cfg.d_model, dtype),
+            "layer": layer_init(ks[4], cfg,
+                                LayerSpec(kind="attn", ffn="dense"), dtype),
+        }
+    return p
+
+
+def param_specs(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+# Optional trace-time sharding hints installed by the distributed step
+# factories (repro.dist.steps).  "embed_lookup" re-lays-out the embedding
+# table for the token lookup: with a vocab-sharded table GSPMD otherwise
+# all-reduces a (B, T, D) partial-gather every step (4.8 GB/dev measured
+# on gemma3-1b train_4k) instead of all-gathering the 0.6 GB table once
+# (§Perf iteration C1).
+SHARDING_HINTS: dict = {}
+
+
+def _out_proj(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"]["table"].T
+    return params["lm_head"]["w"]
+
+
+def encode(cfg: ArchConfig, params, frames) -> jnp.ndarray:
+    """frames: (B, T_src, d_model) stub-frontend embeddings."""
+    x, _, _ = stack_apply(params["encoder"]["stack"], frames, _enc_cfg(cfg),
+                          causal=False)
+    return rmsnorm(params["encoder"]["final_norm"], x)
+
+
+def backbone(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
+             enc_out=None, caches=None, cache_index=None, remat=False):
+    """Returns (hidden, new_caches, aux)."""
+    etbl = params["embed"]
+    hint = SHARDING_HINTS.get("embed_lookup")
+    if hint is not None:
+        etbl = {"table": hint(etbl["table"])}
+    x = embed(etbl, tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x, caches, aux = stack_apply(params["stack"], x, cfg, caches=caches,
+                                 cache_index=cache_index, enc_out=enc_out,
+                                 remat=remat)
+    return rmsnorm(params["final_norm"], x), caches, aux
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat=False):
+    """Next-token CE (+ router aux + optional MTP aux).  labels == -100
+    are ignored; VLM prefix positions are prepended as ignored labels."""
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(cfg, params, batch["frames"])
+    h, _, aux = backbone(cfg, params, batch["tokens"],
+                         prefix_embeds=batch.get("prefix_embeds"),
+                         enc_out=enc_out, remat=remat)
+    labels = batch["labels"]
+    if batch.get("prefix_embeds") is not None:
+        npfx = batch["prefix_embeds"].shape[1]
+        ignore = jnp.full(labels.shape[:1] + (npfx,), -100, labels.dtype)
+        labels = jnp.concatenate([ignore, labels], axis=1)
+    w_out = _out_proj(cfg, params)
+    loss = chunked_ce_loss(h, w_out, labels,
+                           logit_softcap=cfg.final_softcap)
+    if cfg.mtp:
+        hh = rmsnorm(params["mtp"]["norm"], h)
+        from .blocks import layer_apply
+        hh, _, _ = layer_apply(params["mtp"]["layer"], hh, cfg,
+                               LayerSpec(kind="attn", ffn="dense"))
+        # predict token t+2: shift labels one extra step
+        l2 = jnp.concatenate(
+            [labels[:, 1:], jnp.full_like(labels[:, :1], -100)], axis=1)
+        loss = loss + 0.3 * chunked_ce_loss(hh, w_out, l2,
+                                            logit_softcap=cfg.final_softcap)
+    return loss + aux, {"aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    return stack_cache_init(cfg, batch, max_seq, dtype)
+
+
+def prefill(cfg: ArchConfig, params, batch, max_seq: int,
+            cache_dtype=jnp.bfloat16):
+    """Run the prompt through the model, filling a fresh KV cache.
+    Returns (last-position logits, caches, enc_out|None)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(cfg, params, batch["frames"])
+    caches = init_cache(cfg, B, max_seq, cache_dtype)
+    h, caches, _ = backbone(cfg, params, tokens,
+                            prefix_embeds=batch.get("prefix_embeds"),
+                            enc_out=enc_out, caches=caches, cache_index=0)
+    logits = h[:, -1:] @ _out_proj(cfg, params)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, caches, enc_out
+
+
+def decode_step(cfg: ArchConfig, params, caches, tokens, index,
+                enc_out=None):
+    """One-token step.  tokens: (B, 1); index: scalar position of that
+    token (cache filled for [0, index))."""
+    h, caches, _ = backbone(cfg, params, tokens, enc_out=enc_out,
+                            caches=caches, cache_index=index)
+    logits = h @ _out_proj(cfg, params)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, caches

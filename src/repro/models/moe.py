@@ -1,0 +1,98 @@
+"""Mixture-of-Experts layer (deepseek-v3 / grok-1 / jamba styles).
+
+Dispatch is capacity-based per-expert gather:  each token routes to its
+top-k experts by router score; each expert then takes its top-C assigned
+tokens (C = tokens * top_k * capacity_factor / E), gathers them, runs the
+expert FFN as one batched einsum over the expert dimension, and
+scatter-adds the gated outputs back.  This keeps compiled FLOPs at the
+true active-parameter count (E x C x D x F = top_k x tokens x cf x D x F)
+— no dense all-expert compute — and the expert dimension is a clean
+sharding axis for expert parallelism.
+
+Includes the auxiliary load-balance loss (Switch-style) and optional
+shared experts (deepseek: 1 shared + 256 routed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp, mlp_init, normal_init
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int               # expert FFN hidden size
+    num_shared: int = 0         # shared (always-on) experts
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    aux_loss_coef: float = 0.001
+    normalize_gates: bool = True
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3 + cfg.num_shared)
+    E, F = cfg.num_experts, cfg.d_expert
+    p = {
+        "router": normal_init(ks[0], (d_model, E), dtype),
+        # stacked expert FFNs: (E, D, F) x2 and (E, F, D)
+        "w_gate": normal_init(ks[1], (E, d_model, F), dtype),
+        "w_up": normal_init(ks[2], (E, d_model, F), dtype),
+        "w_down": normal_init(jax.random.fold_in(ks[2], 7), (E, F, d_model),
+                              dtype),
+    }
+    for s in range(cfg.num_shared):
+        p[f"shared_{s}"] = mlp_init(ks[3 + s], d_model, F, dtype)
+    return p
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg: MoEConfig,
+              act: str = "silu") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, D) -> (y, aux_loss)."""
+    B, T, D = x.shape
+    N = B * T
+    E, K = cfg.num_experts, cfg.top_k
+    xf = x.reshape(N, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)              # (N, K)
+    if cfg.normalize_gates:
+        gate_vals = gate_vals / jnp.maximum(
+            gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # scores restricted to the chosen experts (0 elsewhere)
+    sel = jnp.zeros((N, E), jnp.float32).at[
+        jnp.arange(N)[:, None], gate_idx].set(gate_vals)       # (N, E)
+
+    # per-expert capacity gather: expert e takes its top-C assigned tokens
+    C = max(1, int(N * K * cfg.capacity_factor / E))
+    C = min(C, N)
+    scores_eT = sel.T                                          # (E, N)
+    top_scores, top_tok = jax.lax.top_k(scores_eT, C)          # (E, C)
+    keep = top_scores > 0.0                                    # dropped slots
+    xe = jnp.take(xf, top_tok, axis=0)                         # (E, C, D)
+
+    h_gate = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    h_gate = jax.nn.silu(h_gate) if act == "silu" else \
+        jax.nn.gelu(h_gate, approximate=True)
+    h_up = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h_gate * h_up, p["w_down"])
+    ye = ye * (top_scores * keep)[..., None].astype(ye.dtype)  # gate + drop
+
+    y = jnp.zeros((N, D), ye.dtype).at[top_tok.reshape(-1)].add(
+        ye.reshape(E * C, D))
+
+    for s in range(cfg.num_shared):
+        y = y + mlp(p[f"shared_{s}"], xf, act)
+
+    # Switch-style load-balance auxiliary loss
+    me = probs.mean(axis=0)                                    # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(
+        1.0 / (N * K))
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+    return y.reshape(B, T, D).astype(x.dtype), aux

@@ -1,0 +1,3 @@
+from .decentralized import (DSGD, D2, GradientTracking, QGDSGDm,
+                            make_method, METHOD_NAMES)
+from .sgd import adamw_init, adamw_update, momentum_init, momentum_update

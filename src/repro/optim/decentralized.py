@@ -1,0 +1,179 @@
+"""Decentralized learning methods over an arbitrary topology schedule.
+
+All methods share the same interface and operate on *node-stacked* pytrees
+(every leaf has a leading axis of size n — virtual nodes in the simulation
+engine; in the distributed runtime the same update runs per-shard with the
+mix realised by collective-permutes, see repro/dist).
+
+    method = make_method("dsgd", momentum=0.9)
+    state  = method.init(params_n)
+    params_n, state = method.step(params_n, grads_n, state, mixer, eta)
+
+``mixer`` applies the current round's mixing to a node-stacked pytree: in
+the simulation engine it is the dense ``W(r) @ X`` (pass the (n, n)
+matrix directly — matrices are auto-wrapped); in the distributed runtime
+it is the compiled collective-permute plan (repro.dist.gossip), possibly
+with lazy self-averaging.  Methods never see the transport.
+
+Implemented (paper Sec. 6.2 & Fig. 9):
+  * DSGD (+ heavy-ball momentum)       [Lian et al. 2017, Eq. (1)]
+  * QG-DSGDm (quasi-global momentum)   [Lin et al. 2021]
+  * D^2                                 [Tang et al. 2018]
+  * Gradient Tracking                   [Nedic et al. 2017; Pu & Nedic 2021]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def mix(W: jnp.ndarray, tree):
+    """x_i' = sum_j W[i, j] x_j applied to every leaf's leading node axis."""
+    Wt = W.astype(jnp.float32)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(Wt, x.astype(jnp.float32),
+                                axes=([1], [0])).astype(x.dtype), tree)
+
+
+@dataclass(frozen=True)
+class Method:
+    name: str
+    init: Callable
+    step: Callable  # (params_n, grads_n, state, mixer|W, eta) -> (params_n, state)
+
+
+def _as_mixer(w_or_fn) -> Callable:
+    """Accept either an (n, n) matrix (simulation) or a tree->tree mixing
+    callable (distributed collective-permute plan)."""
+    if callable(w_or_fn):
+        return w_or_fn
+    return lambda tree: mix(w_or_fn, tree)
+
+
+def _zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+# ---------------------------------------------------------------------------
+# DSGD (+momentum): x^{r+1} = W (x^r - eta * u^r)     [paper Eq. (1)]
+# ---------------------------------------------------------------------------
+
+def DSGD(momentum: float = 0.0) -> Method:
+    def init(params_n):
+        return {"u": _zeros_like(params_n)} if momentum else {}
+
+    def step(params_n, grads_n, state, W, eta):
+        mixer = _as_mixer(W)
+        if momentum:
+            u = jax.tree.map(lambda u, g: momentum * u + g, state["u"],
+                             grads_n)
+            half = jax.tree.map(lambda x, uu: x - eta * uu, params_n, u)
+            return mixer(half), {"u": u}
+        half = jax.tree.map(lambda x, g: x - eta * g, params_n, grads_n)
+        return mixer(half), state
+
+    return Method("dsgd" + (f"m{momentum}" if momentum else ""), init, step)
+
+
+# ---------------------------------------------------------------------------
+# QG-DSGDm [Lin et al. 2021]: the momentum buffer tracks the *global*
+# parameter displacement (x^r - x^{r+1})/eta instead of local gradients,
+# which is robust to heterogeneous data.
+# ---------------------------------------------------------------------------
+
+def QGDSGDm(momentum: float = 0.9, beta: float = 0.9) -> Method:
+    def init(params_n):
+        return {"m": _zeros_like(params_n)}
+
+    def step(params_n, grads_n, state, W, eta):
+        mixer = _as_mixer(W)
+        m = state["m"]
+        half = jax.tree.map(lambda x, g, mm: x - eta * (g + momentum * mm),
+                            params_n, grads_n, m)
+        new = mixer(half)
+        # quasi-global momentum: EMA of the realised displacement
+        m = jax.tree.map(
+            lambda mm, xo, xn: beta * mm + (1 - beta) * (xo - xn) / eta,
+            m, params_n, new)
+        return new, {"m": m}
+
+    return Method("qg-dsgdm", init, step)
+
+
+# ---------------------------------------------------------------------------
+# D^2 [Tang et al. 2018]:
+#   x^{r+1} = W (2 x^r - x^{r-1} - eta (g^r - g^{r-1}))
+#
+# Stability note (our finding, recorded in EXPERIMENTS.md): the textbook
+# update is UNSTABLE under time-varying finite-time schedules — a
+# disagreement mode left untouched by round r (eigenvalue 1 of W^(r))
+# undergoes the bare extrapolation 2x - x_prev and the round-to-round
+# composition amplifies exponentially (measured ~1e15 disagreement after
+# 60 zero-gradient rounds on the Base-2 graph, n=5).  D^2's classical
+# condition eigenvalues(W) > -1/3 covers only static W.  We therefore
+# apply D^2 with lazy mixing W~ = (I + W)/2 by default (eigenvalues >= 0
+# per round), which is stable in all our experiments; set
+# ``lazy_mixing=False`` for the textbook behaviour.
+# ---------------------------------------------------------------------------
+
+def D2(lazy_mixing: bool = True) -> Method:
+    def init(params_n):
+        # x_prev initialised to the params themselves makes the first step
+        # reduce to plain DSGD: 2x - x - eta(g - 0) = x - eta g.
+        return {"x_prev": jax.tree.map(jnp.array, params_n),
+                "g_prev": _zeros_like(params_n)}
+
+    def step(params_n, grads_n, state, W, eta):
+        base = _as_mixer(W)
+        mixer = base
+        if lazy_mixing:
+            def mixer(t):
+                return jax.tree.map(lambda a, b: 0.5 * (a + b), t, base(t))
+        corr = jax.tree.map(
+            lambda x, xp, g, gp: 2.0 * x - xp - eta * (g - gp),
+            params_n, state["x_prev"], grads_n, state["g_prev"])
+        new = mixer(corr)
+        return new, {"x_prev": params_n, "g_prev": grads_n}
+
+    return Method("d2", init, step)
+
+
+# ---------------------------------------------------------------------------
+# Gradient tracking [Nedic et al. 2017]:
+#   y^{r+1} = W (y^r + g^r - g^{r-1});   x^{r+1} = W (x^r - eta y^r)
+# ---------------------------------------------------------------------------
+
+def GradientTracking() -> Method:
+    def init(params_n):
+        # y, g_prev = 0 makes the first tracked direction y^1 = W g^0
+        # (one extra mix vs. the textbook y^0 = g^0 init; same fixed point).
+        return {"y": _zeros_like(params_n), "g_prev": _zeros_like(params_n)}
+
+    def step(params_n, grads_n, state, W, eta):
+        mixer = _as_mixer(W)
+        y = mixer(jax.tree.map(lambda yy, g, gp: yy + g - gp,
+                               state["y"], grads_n, state["g_prev"]))
+        new = mixer(jax.tree.map(lambda x, yy: x - eta * yy, params_n, y))
+        return new, {"y": y, "g_prev": grads_n}
+
+    return Method("gt", init, step)
+
+
+METHOD_NAMES = ("dsgd", "dsgdm", "qg-dsgdm", "d2", "gt")
+
+
+def make_method(name: str, momentum: float = 0.9) -> Method:
+    if name == "dsgd":
+        return DSGD(0.0)
+    if name == "dsgdm":
+        return DSGD(momentum)
+    if name == "qg-dsgdm":
+        return QGDSGDm(momentum)
+    if name == "d2":
+        return D2()
+    if name == "gt":
+        return GradientTracking()
+    raise ValueError(f"unknown method {name!r}")

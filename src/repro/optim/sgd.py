@@ -1,0 +1,38 @@
+"""Plain (per-node local) optimizers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def momentum_init(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def momentum_update(params, grads, mom, *, eta: float, beta: float = 0.9):
+    """Heavy-ball: u <- beta u + g;  x <- x - eta u.  (The fused Pallas
+    kernel in repro.kernels implements exactly this pair on TPU.)"""
+    mom = jax.tree.map(lambda u, g: beta * u + g, mom, grads)
+    params = jax.tree.map(lambda x, u: x - eta * u, params, mom)
+    return params, mom
+
+
+def adamw_init(params):
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, z),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, eta: float, b1=0.9, b2=0.999,
+                 eps=1e-8, wd=0.0):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"],
+                     grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    params = jax.tree.map(
+        lambda p, mm, vv: p - eta * ((mm / bc1) /
+                                     (jnp.sqrt(vv / bc2) + eps) + wd * p),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}

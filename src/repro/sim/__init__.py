@@ -1,0 +1,1 @@
+from .engine import SimResult, simulate_decentralized

@@ -1,0 +1,58 @@
+"""Tests for the analytic roofline cost model."""
+import pytest
+
+from repro.analysis.flops import (forward_flops, model_flops, param_counts,
+                                  train_flops)
+from repro.configs import get_config
+
+
+def test_param_counts_match_model_cards():
+    """The assigned architectures' parameter totals hit the published
+    numbers — the strongest end-to-end check that the configs are the
+    assigned models."""
+    expect_total = {  # billions, +-6%
+        "deepseek-v3-671b": 671, "grok-1-314b": 314,
+        "jamba-1.5-large-398b": 398, "llava-next-34b": 34.4,
+        "granite-8b": 8.1, "qwen1.5-4b": 3.8, "gemma2-2b": 2.6,
+        "mamba2-2.7b": 2.7, "gemma3-1b": 1.0,
+    }
+    for arch, bn in expect_total.items():
+        total = param_counts(get_config(arch))["total"] / 1e9
+        assert abs(total - bn) / bn < 0.07, (arch, total)
+    # MoE active params
+    assert abs(param_counts(get_config("deepseek-v3-671b"))["active"] / 1e9
+               - 37) < 2.5
+    assert abs(param_counts(get_config("jamba-1.5-large-398b"))["active"]
+               / 1e9 - 94) < 4
+
+
+def test_train_flops_ge_forward():
+    cfg = get_config("granite-8b")
+    f = forward_flops(cfg, batch=8, T=1024).flops
+    t = train_flops(cfg, global_batch=8, seq=1024, remat=False).flops
+    tr = train_flops(cfg, global_batch=8, seq=1024, remat=True).flops
+    assert t == pytest.approx(3 * f, rel=1e-6)
+    assert tr > t  # remat recompute adds work
+
+
+def test_model_flops_brackets_analytic():
+    """6*N*D should be within ~2x of the analytic matmul count for a
+    dense arch (attention adds the quadratic term on top)."""
+    cfg = get_config("granite-8b")
+    ana = train_flops(cfg, global_batch=256, seq=4096, remat=False).flops
+    mf = model_flops(cfg, kind="train", global_batch=256, seq=4096)
+    assert 0.5 < mf / ana < 2.0
+
+
+def test_trip_counts_scale_with_blocks():
+    cfg = get_config("granite-8b")
+    full = forward_flops(cfg, batch=1, T=128, trip_counts=True).flops
+    one = forward_flops(cfg, batch=1, T=128, trip_counts=False).flops
+    assert full > one * (cfg.num_blocks - 1) / 2
+
+
+def test_decode_flops_linear_in_cache():
+    cfg = get_config("granite-8b")
+    f1 = forward_flops(cfg, batch=4, T=1, S=1024, decode=True).flops
+    f2 = forward_flops(cfg, batch=4, T=1, S=2048, decode=True).flops
+    assert f2 > f1  # attention term grows with S

@@ -1,0 +1,97 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp ref."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fused_dsgd import fused_dsgd_pallas
+from repro.kernels.gossip_mix import gossip_mix_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,R,C", [
+    (2, 8, 128), (3, 16, 256), (5, 256, 512), (9, 24, 128),
+    (2, 300, 640),  # non-multiple R exercises block clamping via grid
+])
+def test_gossip_mix_matches_ref(S, R, C, dtype):
+    k1, k2 = jax.random.split(KEY)
+    bufs = _rand(k1, (S, R, C), dtype)
+    w = jax.random.uniform(k2, (S,), dtype=jnp.float32)
+    w = w / w.sum()
+    got = gossip_mix_pallas(bufs, w, interpret=True, block_r=128, block_c=128)
+    want = ref.gossip_mix_ref(bufs, w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("R,C", [(8, 128), (64, 256), (257, 384)])
+def test_fused_dsgd_matches_ref(R, C, dtype):
+    ks = jax.random.split(KEY, 3)
+    x, u, g = (_rand(k, (R, C), dtype) for k in ks)
+    beta, eta, pre = 0.9, 0.01, 0.5
+    gx, gu = fused_dsgd_pallas(x, u, g, beta, eta, pre, interpret=True,
+                               block_r=64, block_c=128)
+    wx, wu = ref.fused_dsgd_ref(x, u, g, beta, eta, pre)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(gx, np.float32),
+                               np.asarray(wx, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(gu, np.float32),
+                               np.asarray(wu, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,T,D", [(1, 2, 256, 128), (2, 1, 128, 128)])
+@pytest.mark.parametrize("window", [None, 64, 128])
+@pytest.mark.parametrize("softcap", [None, 30.0])
+def test_flash_attention_matches_ref(B, H, T, D, window, softcap, dtype):
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = _rand(kq, (B, H, T, D), dtype)
+    k = _rand(kk, (B, H, T, D), dtype)
+    v = _rand(kv, (B, H, T, D), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 softcap=softcap, interpret=True,
+                                 block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window,
+                                   softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_cross_len():
+    """Tq != Tk (prefill continuation): last query aligns to last key."""
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = _rand(kq, (1, 2, 128, 128), jnp.float32)
+    k = _rand(kk, (1, 2, 256, 128), jnp.float32)
+    v = _rand(kv, (1, 2, 256, 128), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True,
+                                 block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_non_causal():
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = _rand(kq, (1, 1, 128, 128), jnp.float32)
+    k = _rand(kk, (1, 1, 128, 128), jnp.float32)
+    v = _rand(kv, (1, 1, 128, 128), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=False, interpret=True,
+                                 block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)

@@ -1,0 +1,181 @@
+"""Property tests for the paper's core contribution (Algorithms 1-3).
+
+These validate the paper's own mathematical claims exactly:
+  * double stochasticity of every mixing matrix (Sec. 3)
+  * maximum degree <= k (Sec. 4, footnote 2)
+  * finite-time convergence for ANY n and k (Definition 2, Corollary 1)
+  * length <= 2 log_{k+1}(n) + 2 (Theorem 1)
+  * Base-(k+1) never longer than Simple Base-(k+1) (Alg. 3 line 12)
+  * Base-2 == 1-peer-hypercube behaviour when n is a power of 2 (Sec. F.2)
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graphs import (TopologySchedule, base_graph, build_topology,
+                               hyper_hypercube, is_smooth,
+                               min_factorization, simple_base_graph)
+from repro.core.mixing import (consensus_error_curve, is_doubly_stochastic,
+                               is_finite_time_convergent, schedule_product,
+                               spectral_consensus_rate)
+from repro.core.ppermute_plan import apply_round_plan_np, compile_schedule
+
+ns = st.integers(min_value=2, max_value=120)
+ks = st.integers(min_value=1, max_value=6)
+
+
+def _check_schedule(s: TopologySchedule, k: int):
+    for W in s.Ws:
+        assert is_doubly_stochastic(W)
+        assert np.allclose(W, W.T), "Base-(k+1) family is undirected"
+    assert s.max_degree <= k
+    assert is_finite_time_convergent(s)
+    assert len(s) <= 2 * math.log(s.n, k + 1) + 2 + 1e-9  # Theorem 1
+
+
+@settings(max_examples=150, deadline=None)
+@given(n=ns, k=ks)
+def test_base_graph_properties(n, k):
+    _check_schedule(build_topology("base", n, k), k)
+
+
+@settings(max_examples=150, deadline=None)
+@given(n=ns, k=ks)
+def test_simple_base_graph_properties(n, k):
+    _check_schedule(build_topology("simple_base", n, k), k)
+
+
+@settings(max_examples=100, deadline=None)
+@given(n=ns, k=ks)
+def test_base_not_longer_than_simple(n, k):
+    assert len(base_graph(list(range(n)), k)) <= \
+        len(simple_base_graph(list(range(n)), k))
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=ns, k=ks)
+def test_hyper_hypercube_when_smooth(n, k):
+    if not is_smooth(n, k + 1):
+        return
+    rounds = hyper_hypercube(list(range(n)), k)
+    factors = min_factorization(n, k + 1)
+    assert len(rounds) == len(factors)  # L-finite-time (Sec. 4.1)
+    s = build_topology("hyper_hypercube", n, k)
+    _check_schedule(s, k)
+
+
+@settings(max_examples=80, deadline=None)
+@given(n=ns, k=ks, seed=st.integers(0, 2**31 - 1))
+def test_ppermute_plan_equals_matrix(n, k, seed):
+    """The compiled collective-permute plan reproduces W @ X exactly and
+    never needs more slots than the max degree (Konig)."""
+    s = build_topology("base", n, k)
+    plan = compile_schedule(s)
+    assert plan.max_slots <= max(s.max_degree, 1)
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, 4))
+    for r in range(len(s)):
+        got = apply_round_plan_np(plan.rounds[r], X)
+        want = s.W(r) @ X
+        np.testing.assert_allclose(got, want, atol=1e-12)
+        X = want
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=ns)
+def test_baselines_doubly_stochastic(n):
+    for name in ("ring", "torus", "exp", "one_peer_exp", "complete"):
+        s = build_topology(name, n)
+        for W in s.Ws:
+            assert is_doubly_stochastic(W), (name, n)
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4, 5, 6])
+def test_one_peer_exp_finite_time_iff_power_of_two(p):
+    n = 2 ** p
+    assert is_finite_time_convergent(build_topology("one_peer_exp", n))
+    if n + 1 < 70:
+        # paper Sec. 1/Fig. 1: 1-peer exp only asymptotic when n not 2^p
+        assert not is_finite_time_convergent(
+            build_topology("one_peer_exp", n + 1))
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32, 64])
+def test_base2_matches_one_peer_hypercube_length(n):
+    """Sec. F.2: when n = 2^p the Base-2 graph is the 1-peer hypercube."""
+    b = build_topology("base", n, 1)
+    h = build_topology("one_peer_hypercube", n)
+    assert len(b) == len(h) == int(math.log2(n))
+    assert is_finite_time_convergent(b) and is_finite_time_convergent(h)
+
+
+def test_consensus_curve_hits_zero_exactly():
+    """Fig. 1/6: Base-(k+1) reaches exact consensus after len(s) rounds,
+    static baselines only decay geometrically."""
+    n = 25
+    for k in (1, 2, 4):
+        s = build_topology("base", n, k)
+        errs = consensus_error_curve(s, len(s), seed=1, d=8)
+        assert errs[-1] < 1e-20 * max(errs[0], 1.0)
+    ring = consensus_error_curve(build_topology("ring", n), 10, seed=1, d=8)
+    assert ring[-1] > 1e-3  # far from consensus after same few iters
+
+
+def test_spectral_rates_ordering():
+    """Table 1 qualitative check: beta_ring > beta_torus > beta_exp."""
+    n = 64
+    br = spectral_consensus_rate(build_topology("ring", n).W(0))
+    bt = spectral_consensus_rate(build_topology("torus", n).W(0))
+    be = spectral_consensus_rate(build_topology("exp", n).W(0))
+    assert br > bt > be
+
+
+def test_paper_worked_examples():
+    """Lengths of the paper's figures: Fig. 3 (n=5,k=1: 5 rounds),
+    Fig. 4a (n=6,k=1 Base-2: 4), Fig. 13 (n=6 Simple: 5),
+    Fig. 11 (n=7,k=2: 4), Fig. 10 (n=12,k=2 hyper-hypercube: 3)."""
+    assert len(simple_base_graph(list(range(5)), 1)) == 5
+    assert len(base_graph(list(range(6)), 1)) == 4
+    assert len(simple_base_graph(list(range(6)), 1)) == 5
+    assert len(simple_base_graph(list(range(7)), 2)) == 4
+    assert len(hyper_hypercube(list(range(12)), 2)) == 3
+
+
+def test_schedule_product_is_exact_average():
+    s = build_topology("base", 21, 2)
+    P = schedule_product(s)
+    np.testing.assert_allclose(P, np.full((21, 21), 1 / 21), atol=1e-12)
+
+
+def test_comm_cost_vs_exponential():
+    """The headline claim: Base-(k+1) with k < ceil(log2 n) moves fewer
+    bytes per node per round than the static exponential graph."""
+    n = 100
+    exp = build_topology("exp", n)
+    for k in (1, 2, 3):
+        base = build_topology("base", n, k)
+        assert (base.bytes_per_node_per_round(4) <
+                exp.bytes_per_node_per_round(4))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(4, 80))
+def test_equitopo_family_doubly_stochastic(n):
+    """Paper Sec. F.3.1 baselines [Song et al. 2022]."""
+    for name in ("d_equistatic", "u_equistatic", "one_peer_equidyn"):
+        s = build_topology(name, n)
+        for W in s.Ws:
+            assert is_doubly_stochastic(W), (name, n)
+
+
+def test_base_beats_equistatic_consensus_at_matched_degree():
+    """Paper Fig. 22: the Base-(k+1) graph reaches exact consensus while
+    EquiStatic (same max degree) only contracts geometrically."""
+    n = 25
+    base = build_topology("base", n, 2)
+    eq = build_topology("u_equistatic", n, 2)
+    eb = consensus_error_curve(base, len(base), seed=0, d=8)[-1]
+    ee = consensus_error_curve(eq, len(base), seed=0, d=8)[-1]
+    assert eb < 1e-25 and ee > 1e-6
