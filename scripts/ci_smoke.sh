@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Nightly/manual compile-smoke: lower + compile the production train step
+# for one representative (arch, shape, mesh) cell and fail on any
+# non-"ok" status.  Runs on CPU; repro.launch.dryrun forces 512 fake host
+# devices itself and never allocates arrays (ShapeDtypeStructs only).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${1:-experiments/dryrun-smoke}"
+rm -rf "$OUT"
+
+PYTHONPATH=src python -m repro.launch.dryrun \
+    --arch granite-8b --shape train_4k --mesh single \
+    --topology base --k 1 --out "$OUT"
+
+python - "$OUT" <<'EOF'
+import json, pathlib, sys
+out = pathlib.Path(sys.argv[1])
+results = sorted(out.glob("*.json"))
+assert results, f"dryrun wrote no results under {out}"
+bad = []
+for p in results:
+    res = json.loads(p.read_text())
+    print(f"{p.name}: {res['status']} "
+          f"(compile {res.get('compile_s', '?')}s, "
+          f"flops {res.get('flops', 0):.3e})")
+    if res["status"] != "ok":
+        bad.append((p.name, res.get("traceback", res.get("reason", ""))))
+for name, tb in bad:
+    print(f"\n=== {name} ===\n{tb}", file=sys.stderr)
+sys.exit(1 if bad else 0)
+EOF

@@ -1,0 +1,26 @@
+"""Distributed runtime: sharding rules + collective-permute gossip +
+pjit'd train/serve steps.
+
+This package turns the dense-matrix simulation (``repro.sim``,
+``repro.core.mixing``) into a real sharded runtime:
+
+  * ``sharding``  — maps every arch in ``repro.configs`` onto the
+    production meshes (which mesh axis hosts the gossip nodes, which axes
+    shard weights) and derives per-leaf ``PartitionSpec`` trees.
+  * ``gossip``    — lowers a compiled ``ppermute_plan`` schedule to
+    ``jax.lax.ppermute`` collectives under ``shard_map``; bit-for-bit
+    equal (up to f32 reduction order) to the dense ``W(r)`` product.
+  * ``steps``     — jitted train / prefill / decode step factories wiring
+    the mixer into ``repro.optim.decentralized`` and the serving path.
+"""
+from .gossip import make_gossip_mixer
+from .sharding import (POD_GOSSIP_ARCHS, ShardingRules, make_rules,
+                       param_partition_specs)
+from .steps import (make_decode_step, make_prefill, make_train_step,
+                    node_stack_specs)
+
+__all__ = [
+    "POD_GOSSIP_ARCHS", "ShardingRules", "make_rules",
+    "param_partition_specs", "make_gossip_mixer", "make_train_step",
+    "make_prefill", "make_decode_step", "node_stack_specs",
+]

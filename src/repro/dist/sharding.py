@@ -1,0 +1,178 @@
+"""Sharding rule engine: which mesh axes host the gossip nodes and which
+shard the weights, for every (arch, mesh, context) combination.
+
+Two mesh families (repro.launch.mesh):
+
+  * single pod   (16, 16)      axes ("data", "model")
+  * multi-pod    (2, 16, 16)   axes ("pod", "data", "model")
+
+Small archs (fit one pod at bf16) train with the gossip nodes on the
+"data" axis and Megatron tensor parallelism on "model"; a multi-pod mesh
+adds plain data parallelism over "pod".  The >256 GB archs
+(``POD_GOSSIP_ARCHS``) need both in-pod axes for the weights
+(2-D "megatron" sharding: contraction dim on "data", output dim on
+"model") so the gossip moves to the cross-DCN "pod" axis — exactly the
+axis whose bandwidth the paper's degree-k topologies economise.  On a
+single pod that degenerates to 1-node gossip with FSDP-style batch
+sharding over "data".
+
+Rules are pure functions of ``mesh.shape``/``mesh.axis_names`` so unit
+tests can drive them with a fake mesh and no devices.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Architectures whose bf16 weights exceed a single v5e pod's HBM budget:
+# weights take both in-pod axes, gossip happens across pods.
+POD_GOSSIP_ARCHS = ("grok-1-314b", "jamba-1.5-large-398b",
+                    "deepseek-v3-671b")
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """mesh + axis roles.  ``tp`` shards weight matrices, ``dp`` shards
+    the within-node batch dim, ``node_axis`` hosts the gossip nodes
+    (None = degenerate single-node gossip)."""
+    mesh: Any
+    tp: tuple[str, ...]
+    dp: tuple[str, ...]
+    node_axis: str | None
+
+    def axis_size(self, axes: tuple[str, ...]) -> int:
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def divides(self, dim: int, axes: tuple[str, ...]) -> bool:
+        """True iff ``dim`` splits evenly over the named mesh axes — the
+        guard before any spec entry; indivisible dims stay replicated."""
+        return dim % self.axis_size(axes) == 0
+
+    @property
+    def n_nodes(self) -> int:
+        if self.node_axis is None:
+            return 1
+        return self.mesh.shape[self.node_axis]
+
+
+def make_rules(mesh, *, arch_name: str, context: str) -> ShardingRules:
+    """Axis roles for ``arch_name`` on ``mesh`` in context "train" or
+    "serve"."""
+    if context not in ("train", "serve"):
+        raise ValueError(f"unknown context {context!r}")
+    axes = tuple(mesh.axis_names)
+    multi = "pod" in axes
+    big = arch_name in POD_GOSSIP_ARCHS
+
+    if context == "train":
+        if big:
+            tp = ("data", "model")
+            if multi:
+                return ShardingRules(mesh, tp, ("data",), "pod")
+            # degenerate 1-node gossip; batch FSDP-sharded over "data"
+            # alongside the 2-D weights (§Perf B1).
+            return ShardingRules(mesh, tp, ("data",), None)
+        dp = ("pod",) if multi else ()
+        return ShardingRules(mesh, ("model",), dp, "data")
+
+    # serve: no gossip nodes; batch over every non-weight axis.
+    if big:
+        dp = ("pod",) if multi else ()
+        return ShardingRules(mesh, ("data", "model"), dp, None)
+    dp = ("pod", "data") if multi else ("data",)
+    return ShardingRules(mesh, ("model",), dp, None)
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpec derivation
+# ---------------------------------------------------------------------------
+
+def _has_block_dim(path) -> bool:
+    """Leaves under a "blocks" key carry a leading lax.scan stacking dim
+    (repro.models.blocks.stack_init / stack_cache_init)."""
+    return any(isinstance(k, jax.tree_util.DictKey) and k.key == "blocks"
+               for k in path)
+
+
+def param_partition_specs(params, rules: ShardingRules, node_axis=False):
+    """PartitionSpec tree for a parameter (or optimizer-state) pytree.
+
+    Layout rule per leaf, after peeling the bookkeeping dims (optional
+    leading node-stack dim -> ``rules.node_axis``; "blocks" scan dim ->
+    replicated):
+
+      * matrices (>= 2 remaining dims): last dim on ``tp[-1]``
+        ("model"); with a 2-axis tp additionally the contraction dim on
+        ``tp[0]`` ("data") — Megatron 2-D (§Perf B2).
+      * vectors / scalars (norm scales, biases): replicated.
+
+    Any split that doesn't divide evenly falls back to replicated.
+    """
+    tp = rules.tp
+
+    def spec_for(path, leaf):
+        shape = tuple(leaf.shape)
+        lead: list = []
+        if node_axis:
+            lead.append(rules.node_axis)
+        if _has_block_dim(path):
+            lead.append(None)
+        weight = shape[len(lead):]
+        sub: list = [None] * len(weight)
+        if len(weight) >= 2:
+            if rules.divides(weight[-1], (tp[-1],)):
+                sub[-1] = tp[-1]
+            if len(tp) == 2 and rules.divides(weight[-2], (tp[0],)):
+                sub[-2] = tp[0]
+        return P(*lead, *sub)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_partition_specs(batch, rules: ShardingRules, *, node_stacked=True):
+    """Input-batch spec tree.  Node-stacked train batches are
+    (n, b, ...): node dim on ``node_axis``, per-node batch dim on ``dp``.
+    Serve batches are (B, ...): batch dim on ``dp``.  A batch dim that
+    doesn't divide over ``dp`` stays replicated (pjit rejects uneven
+    argument shardings)."""
+    dp = tuple(rules.dp) if rules.dp else None
+
+    def spec_for(leaf):
+        nd = len(leaf.shape)
+        batch_dim = 1 if node_stacked else 0
+        entry = dp if (dp is not None and nd > batch_dim and
+                       rules.divides(leaf.shape[batch_dim], rules.dp)) \
+            else None
+        lead = [rules.node_axis, entry] if node_stacked else [entry]
+        lead = lead[:nd]
+        return P(*lead, *([None] * (nd - len(lead))))
+
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_partition_specs(cache, rules: ShardingRules):
+    """KV/SSM-cache spec tree: leading "blocks" scan dim replicated,
+    batch dim sharded over ``dp``, everything else replicated (the
+    sequence/head layout is left to GSPMD propagation from the weights).
+    """
+    dp = tuple(rules.dp) if rules.dp else None
+
+    def spec_for(path, leaf):
+        lead: list = []
+        if _has_block_dim(path):
+            lead.append(None)
+        batch_dim = leaf.shape[len(lead)] if len(leaf.shape) > len(lead) \
+            else 1
+        entry = dp if (dp is not None
+                       and rules.divides(batch_dim, rules.dp)) else None
+        lead.append(entry)
+        lead = lead[:len(leaf.shape)]
+        return P(*lead, *([None] * (len(leaf.shape) - len(lead))))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

@@ -1,0 +1,227 @@
+"""pjit'd step factories: decentralized train step + serving
+prefill/decode, with shardings derived from ``repro.dist.sharding`` and
+the gossip realised by ``repro.dist.gossip``.
+
+The train step is the distributed twin of ``repro.sim.engine``: the
+node-stacked parameter tree (leading axis = gossip nodes) lives sharded
+over ``rules.node_axis``; per-node gradients come from a ``vmap`` over
+that axis (GSPMD turns it into pure SPMD — no cross-node traffic); the
+method's mixing is the compiled collective-permute schedule instead of
+the dense ``W(r) @ X``.  Numerics match the simulation up to f32
+reduction order — ``tests/test_dist.py`` is the oracle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.graphs import TopologySchedule, build_topology
+from repro.core.ppermute_plan import SchedulePlan, compile_schedule
+from repro.models import model as M
+from repro.optim.decentralized import make_method
+
+from .gossip import make_gossip_mixer
+from .sharding import (ShardingRules, batch_partition_specs,
+                       cache_partition_specs, make_rules,
+                       param_partition_specs)
+
+
+def node_stack_specs(params, n: int):
+    """ShapeDtypeStructs with the leading node axis prepended — the
+    shape-only twin of broadcasting real params to (n, ...)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype),
+        params)
+
+
+def _shardings(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_entry(rules: ShardingRules, batch: int | None = None):
+    """dp spec entry, dropped when the known batch size doesn't divide
+    over it (pjit rejects uneven argument shardings)."""
+    if not rules.dp:
+        return None
+    if batch is not None and not rules.divides(batch, rules.dp):
+        return None
+    return tuple(rules.dp)
+
+
+# ---------------------------------------------------------------------------
+# training
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TrainStepBundle:
+    step_fn: Any                  # jitted (params_n, opt, batch, step)
+    n_nodes: int
+    n_rounds: int
+    rules: ShardingRules
+    schedule: TopologySchedule
+    plan: SchedulePlan
+    param_shardings: Any
+
+
+def make_train_step(cfg, mesh, *, topology: str = "base", k: int = 1,
+                    method_name: str = "dsgdm", eta: float = 0.01,
+                    param_dtype=jnp.bfloat16, remat: bool = True,
+                    flatten_gossip: bool = False,
+                    embed_lookup_replicated: bool = False,
+                    batch_shapes=None, momentum: float = 0.9
+                    ) -> TrainStepBundle:
+    """One DSGD-family step: per-node grads -> method update -> gossip
+    round ``step % n_rounds`` over the mesh's node axis."""
+    rules = make_rules(mesh, arch_name=cfg.name, context="train")
+    n = rules.n_nodes
+    sched = build_topology(topology, n, k)
+    plan = compile_schedule(sched)
+    method = make_method(method_name, momentum)
+
+    p_sds = node_stack_specs(M.param_specs(cfg, param_dtype), n)
+    pspecs = param_partition_specs(p_sds, rules, node_axis=True)
+    psh = _shardings(mesh, pspecs)
+    osh = _shardings(
+        mesh, param_partition_specs(jax.eval_shape(method.init, p_sds),
+                                    rules, node_axis=True))
+    if batch_shapes is not None:
+        bsh = _shardings(mesh, batch_partition_specs(batch_shapes, rules))
+        refine_batch = None
+    else:
+        # Batch shapes unknown until the first call: pin only the node
+        # axis (always exact) here, and refine the per-node batch dim
+        # over dp at trace time, when batch_partition_specs can apply
+        # its divisibility guard to the real shapes.
+        bsh = NamedSharding(mesh, P(rules.node_axis))
+
+        def refine_batch(batch):
+            return jax.lax.with_sharding_constraint(
+                batch, _shardings(mesh, batch_partition_specs(batch,
+                                                              rules)))
+    scalar = NamedSharding(mesh, P())
+
+    if rules.node_axis is None:
+        def mix_round(tree, step):
+            return tree
+    else:
+        mix_round = make_gossip_mixer(mesh, plan, rules.node_axis, pspecs,
+                                      flatten=flatten_gossip)
+
+    def loss_one(p, b):
+        return M.loss_fn(cfg, p, b, remat=remat)[0]
+
+    embed_repl = NamedSharding(mesh, P(rules.node_axis))
+
+    def _step(params_n, opt, batch, step):
+        if refine_batch is not None:
+            batch = refine_batch(batch)
+        params_l = params_n
+        if embed_lookup_replicated:
+            # Re-lay-out the (node-stacked) embedding table replicated
+            # over the weight axes before the token lookup: one table
+            # all-gather instead of a (B, T, D) partial-gather all-reduce
+            # per step (§Perf C1).
+            table = jax.lax.with_sharding_constraint(
+                params_n["embed"]["table"], embed_repl)
+            params_l = dict(params_n)
+            params_l["embed"] = {"table": table}
+        losses, grads = jax.vmap(jax.value_and_grad(loss_one))(
+            params_l, batch)
+        params_n, opt = method.step(params_n, grads, opt,
+                                    lambda t: mix_round(t, step), eta)
+        return params_n, opt, losses.mean()
+
+    step_fn = jax.jit(_step, in_shardings=(psh, osh, bsh, scalar),
+                      out_shardings=(psh, osh, scalar))
+    return TrainStepBundle(step_fn=step_fn, n_nodes=n, n_rounds=len(sched),
+                           rules=rules, schedule=sched, plan=plan,
+                           param_shardings=psh)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PrefillBundle:
+    fn: Callable                  # fn(batch) -> jitted (params, batch)
+    rules: ShardingRules
+    seq: int
+
+
+@dataclass(frozen=True)
+class DecodeBundle:
+    fn: Any                       # jitted (params, cache, tokens, index[, enc])
+    rules: ShardingRules
+    seq: int
+
+
+def make_prefill(cfg, mesh, *, batch: int, seq: int,
+                 param_dtype=jnp.bfloat16,
+                 cache_dtype=jnp.bfloat16) -> PrefillBundle:
+    """Prompt -> (last-position logits, filled KV cache, enc_out|None)."""
+    rules = make_rules(mesh, arch_name=cfg.name, context="serve")
+    psh = _shardings(mesh,
+                     param_partition_specs(M.param_specs(cfg, param_dtype),
+                                           rules))
+    bsh = NamedSharding(mesh, P(_dp_entry(rules, batch)))
+    cache_sds = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, seq, cache_dtype))
+    # Pin the cache layout so prefill's output commits to the same
+    # sharding make_decode_step pins on its input (a committed arg with a
+    # different layout would be rejected by pjit, not resharded).
+    csh = _shardings(mesh, cache_partition_specs(cache_sds, rules))
+
+    jitted = jax.jit(
+        lambda params, b: M.prefill(cfg, params, b, seq, cache_dtype),
+        in_shardings=(psh, bsh), out_shardings=(bsh, csh, bsh))
+
+    def fn(batch_like):
+        # batch structure (frontend keys) only selects the jit cache entry
+        del batch_like
+        return jitted
+
+    return PrefillBundle(fn=fn, rules=rules, seq=seq)
+
+
+def make_decode_step(cfg, mesh, *, batch: int, seq: int,
+                     param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                     append_free: bool = False) -> DecodeBundle:
+    """One-token decode step against a sharded KV cache."""
+    from repro.models import attention as A
+
+    rules = make_rules(mesh, arch_name=cfg.name, context="serve")
+    psh = _shardings(mesh,
+                     param_partition_specs(M.param_specs(cfg, param_dtype),
+                                           rules))
+    cache_sds = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, seq, cache_dtype))
+    csh = _shardings(mesh, cache_partition_specs(cache_sds, rules))
+    dsh = NamedSharding(mesh, P(_dp_entry(rules, batch)))
+    scalar = NamedSharding(mesh, P())
+
+    def run(params, caches, tokens, index, enc_out=None):
+        # The append-free flag is read by the attention layer at trace
+        # time; scope it to this trace.
+        prev = A.APPEND_FREE_DECODE
+        A.APPEND_FREE_DECODE = append_free
+        try:
+            return M.decode_step(cfg, params, caches, tokens, index,
+                                 enc_out=enc_out)
+        finally:
+            A.APPEND_FREE_DECODE = prev
+
+    if cfg.encoder is not None:
+        fn = jax.jit(lambda p, c, t, i, e: run(p, c, t, i, e),
+                     in_shardings=(psh, csh, dsh, scalar, dsh),
+                     out_shardings=(dsh, csh))
+    else:
+        fn = jax.jit(lambda p, c, t, i: run(p, c, t, i),
+                     in_shardings=(psh, csh, dsh, scalar),
+                     out_shardings=(dsh, csh))
+    return DecodeBundle(fn=fn, rules=rules, seq=seq)

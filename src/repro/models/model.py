@@ -71,13 +71,12 @@ def param_specs(cfg: ArchConfig, dtype=jnp.bfloat16):
 # forward
 # ---------------------------------------------------------------------------
 
-# Optional trace-time sharding hints installed by the distributed step
-# factories (repro.dist.steps).  "embed_lookup" re-lays-out the embedding
-# table for the token lookup: with a vocab-sharded table GSPMD otherwise
-# all-reduces a (B, T, D) partial-gather every step (4.8 GB/dev measured
-# on gemma3-1b train_4k) instead of all-gathering the 0.6 GB table once
-# (§Perf iteration C1).
-SHARDING_HINTS: dict = {}
+# Embedding-lookup layout note (§Perf iteration C1): with a vocab-sharded
+# table GSPMD all-reduces a (B, T, D) partial-gather every step
+# (4.8 GB/dev measured on gemma3-1b train_4k) instead of all-gathering
+# the 0.6 GB table once.  The distributed train step re-lays-out the
+# table before calling the model — see
+# repro.dist.steps.make_train_step(embed_lookup_replicated=True).
 
 
 def _out_proj(cfg, params):
@@ -96,11 +95,7 @@ def encode(cfg: ArchConfig, params, frames) -> jnp.ndarray:
 def backbone(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
              enc_out=None, caches=None, cache_index=None, remat=False):
     """Returns (hidden, new_caches, aux)."""
-    etbl = params["embed"]
-    hint = SHARDING_HINTS.get("embed_lookup")
-    if hint is not None:
-        etbl = {"table": hint(etbl["table"])}
-    x = embed(etbl, tokens)
+    x = embed(params["embed"], tokens)
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     if prefix_embeds is not None:

@@ -12,6 +12,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
