@@ -11,6 +11,7 @@ from repro.core.mixing import (is_finite_time_convergent,
                                spectral_consensus_rate)
 
 from .common import emit
+from .registry import register
 
 PARAM_BYTES = int(8e9 * 2)     # 8B params, bf16
 
@@ -19,6 +20,7 @@ TOPOS = [("base", 1), ("base", 2), ("base", 4), ("simple_base", 1),
          ("torus", None), ("complete", None)]
 
 
+@register("comm_cost", fast=True)
 def run(ns=(25, 64, 256)) -> dict:
     out = {}
     for n in ns:

@@ -1,7 +1,18 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, row recording.
+
+``emit`` keeps the historical ``name,us_per_call,derived`` CSV contract
+on stdout and additionally appends a structured row to every active
+recorder (see :func:`recording`) so suites can be captured into the
+schema-versioned JSON artifacts without changing their bodies.
+"""
 from __future__ import annotations
 
+import contextlib
 import time
+
+import numpy as np
+
+_RECORDERS: list[list] = []
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):
@@ -14,5 +25,63 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
     return out, dt * 1e6  # microseconds
 
 
+def parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` -> dict with int/float coercion where the value parses
+    (unparseable values stay strings; bare tokens become True)."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if not part:
+            continue
+        if "=" not in part:
+            out[part] = True
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    row = {"name": name, "us_per_call": float(us_per_call),
+           "derived": parse_derived(derived)}
+    for rec in _RECORDERS:
+        rec.append(row)
+
+
+@contextlib.contextmanager
+def recording(rows: list):
+    """Capture every ``emit`` during the block into ``rows``."""
+    _RECORDERS.append(rows)
+    try:
+        yield rows
+    finally:
+        # remove by identity — list.remove matches by equality and could
+        # deregister a different-but-equal recorder (e.g. two empty lists)
+        for i in range(len(_RECORDERS) - 1, -1, -1):
+            if _RECORDERS[i] is rows:
+                del _RECORDERS[i]
+                break
+
+
+def calibrate_us(iters: int = 5) -> float:
+    """Fixed float32 matmul microbenchmark (best of ``iters``), recorded
+    in every artifact's env fingerprint.  benchmarks/report.py divides
+    suite timings by this to compare artifacts across machines of
+    different speeds."""
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((256, 256)).astype(np.float32)
+    b = rng.standard_normal((256, 256)).astype(np.float32)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for _ in range(8):
+            b = a @ b
+            b /= max(1.0, float(np.abs(b).max()))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6

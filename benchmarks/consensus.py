@@ -15,6 +15,7 @@ from repro.core.graphs import build_topology
 from repro.core.mixing import consensus_error_curve
 
 from .common import emit, timed
+from .registry import register
 
 CASES = [25, 22, 64]           # n=25/22 from the paper, 64 = power of 2
 TOPOS = [("base", 1), ("base", 2), ("base", 4), ("simple_base", 1),
@@ -22,6 +23,7 @@ TOPOS = [("base", 1), ("base", 2), ("base", 4), ("simple_base", 1),
          ("torus", None)]
 
 
+@register("consensus", fast=True)
 def run() -> dict:
     results = {}
     for n in CASES:

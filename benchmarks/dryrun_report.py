@@ -1,0 +1,72 @@
+"""Generate the §Dry-run markdown table from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.dryrun_report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def human(n):
+    for u, s in (("T", 1e12), ("G", 1e9), ("M", 1e6), ("K", 1e3)):
+        if abs(n) >= s:
+            return f"{n / s:.2f}{u}"
+    return f"{n:.0f}"
+
+
+def run(dryrun_dir="experiments/dryrun", out_md="experiments/dryrun.md"):
+    recs = {}
+    for f in glob.glob(os.path.join(dryrun_dir, "*.json")):
+        base = os.path.basename(f)[:-5]
+        if base.count("_") > 2:  # variant runs (topology/flat) excluded
+            parts = base.split("_")
+            if parts[-1] not in ("single", "multi"):
+                continue
+        d = json.load(open(f))
+        recs[(d["arch"], d["shape"], d["mesh"])] = d
+    lines = [
+        "| arch | shape | mesh | status | HLO flops/dev | wire B/dev | "
+        "args B/dev | temp B/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    ok = skip = err = 0
+    archs = sorted({a for (a, _, _) in recs})
+    for a in archs:
+        for s in ORDER:
+            for m in ("single", "multi"):
+                d = recs.get((a, s, m))
+                if d is None:
+                    lines.append(f"| {a} | {s} | {m} | PENDING | | | | | |")
+                    continue
+                if d["status"] == "skipped":
+                    skip += 1
+                    lines.append(f"| {a} | {s} | {m} | skip (full-attn) "
+                                 f"| | | | | |")
+                    continue
+                if d["status"] != "ok":
+                    err += 1
+                    lines.append(f"| {a} | {s} | {m} | ERROR | | | | | |")
+                    continue
+                ok += 1
+                mem = d.get("memory", {})
+                lines.append(
+                    f"| {a} | {s} | {m} | ok | {human(d['flops'])} | "
+                    f"{human(d['collective_wire_bytes'])} | "
+                    f"{human(mem.get('argument_size_in_bytes', 0))} | "
+                    f"{human(mem.get('temp_size_in_bytes', 0))} | "
+                    f"{d['compile_s']} |")
+    header = (f"Dry-run status: {ok} ok / {skip} skipped (documented) / "
+              f"{err} errors.\n\n")
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
+    with open(out_md, "w") as fh:
+        fh.write(header + "\n".join(lines) + "\n")
+    print(header.strip())
+    return recs
+
+
+if __name__ == "__main__":
+    run()

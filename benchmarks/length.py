@@ -8,8 +8,10 @@ import time
 from repro.core.graphs import base_graph, simple_base_graph
 
 from .common import emit
+from .registry import register
 
 
+@register("length", fast=True)
 def run() -> dict:
     out = {}
     for k in (1, 2, 4):

@@ -16,6 +16,7 @@ import numpy as np
 from repro.core.graphs import build_topology
 
 from .common import emit
+from .registry import register
 
 
 def _run_curve(sched, iters, dtype, seed=0, d=256):
@@ -29,6 +30,7 @@ def _run_curve(sched, iters, dtype, seed=0, d=256):
     return float(((Xf - xbar) ** 2).sum(1).mean())
 
 
+@register("precision")
 def run(n: int = 21) -> dict:
     out = {}
     base = build_topology("base", n, 2)

@@ -1,0 +1,208 @@
+"""Benchmark suite registry + schema-versioned JSON artifacts.
+
+Every suite module registers its entry point with ``@register(name)``;
+``run_suite`` executes one suite under a row recorder and wraps the
+result into a machine-readable artifact:
+
+    {
+      "schema_version": 1,
+      "suite": "consensus",
+      "created_unix": <float>,
+      "ok": true, "error": null,
+      "wall_s": <float>,
+      "params": {"steps": 300} | {},
+      "env": {"python", "jax", "numpy", "platform", "cpu_count",
+              "devices", "calib_us"},
+      "rows": [{"name", "us_per_call", "derived": {...}}, ...],
+      "metrics": <suite return value, JSON-sanitized>
+    }
+
+``BENCH_<suite>.json`` artifacts are what CI uploads and what
+benchmarks/report.py diffs against the committed baselines in
+benchmarks/baselines/ (regenerate with scripts/bench_baseline.sh).
+"""
+from __future__ import annotations
+
+import importlib
+import json
+import math
+import os
+import platform
+import time
+import traceback
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable
+
+import numpy as np
+
+from . import common
+
+SCHEMA_VERSION = 1
+
+# suite modules imported by load_all(); each registers itself on import
+SUITE_MODULES = ("consensus", "length", "comm_cost", "dsgd_hetero",
+                 "robust_methods", "precision", "roofline")
+
+# the cheap, deterministic suites CI runs on every PR
+FAST_SUITES = ("consensus", "length", "comm_cost")
+
+
+@dataclass(frozen=True)
+class Suite:
+    name: str
+    fn: Callable[..., dict]
+    fast: bool            # cheap + deterministic enough for the PR lane
+    takes_steps: bool     # accepts a ``steps=`` kwarg
+    description: str
+
+
+SUITES: dict[str, Suite] = {}
+
+
+def register(name: str, *, fast: bool = False, takes_steps: bool = False):
+    """Decorator: register a suite entry point under ``name``."""
+    def deco(fn):
+        doc = (fn.__doc__ or "").strip().splitlines()
+        SUITES[name] = Suite(name, fn, fast, takes_steps,
+                             doc[0] if doc else "")
+        return fn
+    return deco
+
+
+def load_all() -> dict[str, Suite]:
+    for m in SUITE_MODULES:
+        importlib.import_module(f"{__package__}.{m}")
+    return SUITES
+
+
+def env_fingerprint(calibrate: bool = True) -> dict:
+    import jax
+    env = {
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count() or 0,
+        "devices": [str(d) for d in jax.devices()],
+    }
+    if calibrate:
+        env["calib_us"] = common.calibrate_us()
+    return env
+
+
+def _sanitize(x):
+    """Best-effort conversion to strict-JSON-serializable types.
+    Non-finite floats become strings ("nan"/"inf") — bare NaN/Infinity
+    tokens are not RFC-8259 JSON and break strict consumers; the string
+    form still trips report.py's changed-value check vs a numeric
+    baseline."""
+    if isinstance(x, dict):
+        return {str(k): _sanitize(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_sanitize(v) for v in x]
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return _sanitize(float(x))
+    if isinstance(x, np.ndarray):
+        return _sanitize(x.tolist())
+    if isinstance(x, float) and not math.isfinite(x):
+        return str(x)
+    if isinstance(x, (bool, int, float, str)) or x is None:
+        return x
+    return str(x)
+
+
+def run_suite(name: str, *, steps: int | None = None,
+              env: dict | None = None) -> dict:
+    """Run one registered suite; never raises — failures are recorded in
+    the artifact (``ok=False`` + traceback)."""
+    suite = SUITES[name]
+    rows: list = []
+    err = None
+    metrics = None
+    kwargs = {"steps": steps} if (suite.takes_steps and steps) else {}
+    t0 = time.perf_counter()
+    with common.recording(rows):
+        try:
+            metrics = suite.fn(**kwargs)
+        except Exception:
+            err = traceback.format_exc()
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "suite": name,
+        "created_unix": time.time(),
+        "ok": err is None,
+        "error": err,
+        "wall_s": time.perf_counter() - t0,
+        "params": dict(kwargs),
+        "env": env_fingerprint() if env is None else env,
+        "rows": _sanitize(rows),
+        "metrics": _sanitize(metrics),
+    }
+
+
+REQUIRED_KEYS = ("schema_version", "suite", "created_unix", "ok", "error",
+                 "wall_s", "params", "env", "rows", "metrics")
+
+
+def validate_artifact(art: dict) -> list[str]:
+    """Schema check; returns a list of problems (empty = valid)."""
+    problems = []
+    for k in REQUIRED_KEYS:
+        if k not in art:
+            problems.append(f"missing key {k!r}")
+    if art.get("schema_version") != SCHEMA_VERSION:
+        problems.append(
+            f"schema_version {art.get('schema_version')!r} != {SCHEMA_VERSION}")
+    if not isinstance(art.get("suite"), str):
+        problems.append("suite must be a string")
+    if not isinstance(art.get("ok"), bool):
+        problems.append("ok must be a bool")
+    if not isinstance(art.get("env"), dict):
+        problems.append("env must be a dict")
+    rows = art.get("rows")
+    if not isinstance(rows, list):
+        problems.append("rows must be a list")
+    else:
+        for i, r in enumerate(rows):
+            if not isinstance(r, dict) or not \
+                    {"name", "us_per_call", "derived"} <= set(r):
+                problems.append(f"row {i} malformed: {r!r}")
+                continue
+            if not isinstance(r["derived"], dict):
+                problems.append(f"row {i} derived must be a dict")
+    try:
+        # allow_nan=False: bare NaN/Infinity tokens are not valid JSON
+        json.dumps(art, allow_nan=False)
+    except (TypeError, ValueError) as e:
+        problems.append(f"not strict-JSON-serializable: {e}")
+    return problems
+
+
+def artifact_path(out_dir: str | Path, suite: str) -> Path:
+    return Path(out_dir) / f"BENCH_{suite}.json"
+
+
+def write_artifact(art: dict, out_dir: str | Path) -> Path:
+    problems = validate_artifact(art)
+    if problems:
+        raise ValueError(f"invalid artifact for {art.get('suite')}: "
+                         f"{problems}")
+    path = artifact_path(out_dir, art["suite"])
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(art, indent=1, sort_keys=True) + "\n")
+    return path
+
+
+def load_artifacts(path: str | Path) -> dict[str, dict]:
+    """Load ``BENCH_*.json`` artifacts from a directory (or one file);
+    returns {suite_name: artifact}."""
+    p = Path(path)
+    files = [p] if p.is_file() else sorted(p.glob("BENCH_*.json"))
+    out = {}
+    for f in files:
+        art = json.loads(f.read_text())
+        out[art.get("suite", f.stem)] = art
+    return out

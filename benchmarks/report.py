@@ -1,69 +1,232 @@
-"""Generate the §Dry-run markdown table from experiments/dryrun/*.json."""
+"""Diff two benchmark artifact sets and flag regressions.
+
+    python -m benchmarks.report BASELINE NEW [--threshold 0.2]
+        [--metric-threshold 1e-6] [--ignore-timings] [--min-us 50]
+        [--suites a,b]
+
+BASELINE / NEW are directories holding ``BENCH_<suite>.json`` artifacts
+(or single artifact files).  Regressions (exit code 1):
+
+* a suite present in BASELINE that is missing from NEW, or ``ok`` in
+  BASELINE but failing in NEW;
+* a suite whose aggregate normalised timing (sum of matched rows'
+  ``us_per_call``) worsened by more than ``--threshold`` (relative).
+  Timings are divided by each artifact's recorded ``env.calib_us``
+  matmul calibration when both sides have one, so artifacts from
+  machines of different speeds compare meaningfully.  The gate is
+  per-suite rather than per-row because individual small-row timings
+  are scheduler-noise dominated (observed >2x same-machine jitter);
+  rows slower than ``--threshold`` individually are still listed as
+  diagnostic notes, skipping rows under ``--min-us`` in the baseline;
+* a derived numeric metric drifting by more than ``--metric-threshold``
+  (relative, with a 1e-12 absolute floor so rounding-noise residuals
+  don't flag across BLAS implementations) — derived metrics are
+  deterministic, seed-pinned quantities (schedule lengths, degrees,
+  consensus errors, accuracies), so any drift means the reproduction
+  itself changed, in either direction.  A non-finite metric on EITHER
+  side (numeric NaN/inf or the sanitized "nan"/"inf" string form)
+  always flags, including baseline-and-new both non-finite;
+* a non-numeric derived value that changed, or a baseline row/metric
+  missing from NEW.
+
+Rows and suites present only in NEW are reported as informational, not
+as failures.
+"""
 from __future__ import annotations
 
-import glob
-import json
-import os
+import argparse
+import math
+import sys
+from pathlib import Path
 
-ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+from .registry import load_artifacts, validate_artifact
+
+# metrics smaller than this are rounding noise: drift is measured
+# against the floor instead of the (noise-level) baseline value
+METRIC_ABS_FLOOR = 1e-12
+
+# registry._sanitize serializes non-finite floats as strings, so both
+# the numeric and string encodings must be recognised
+_NONFINITE_STRINGS = {"nan", "-nan", "inf", "-inf", "+inf", "infinity",
+                      "-infinity"}
 
 
-def human(n):
-    for u, s in (("T", 1e12), ("G", 1e9), ("M", 1e6), ("K", 1e3)):
-        if abs(n) >= s:
-            return f"{n / s:.2f}{u}"
-    return f"{n:.0f}"
+def _non_finite(v) -> bool:
+    if isinstance(v, bool):
+        return False
+    if isinstance(v, float):
+        return not math.isfinite(v)
+    if isinstance(v, str):
+        return v.strip().lower() in _NONFINITE_STRINGS
+    return False
 
 
-def run(dryrun_dir="experiments/dryrun", out_md="experiments/dryrun.md"):
-    recs = {}
-    for f in glob.glob(os.path.join(dryrun_dir, "*.json")):
-        base = os.path.basename(f)[:-5]
-        if base.count("_") > 2:  # variant runs (topology/flat) excluded
-            parts = base.split("_")
-            if parts[-1] not in ("single", "multi"):
+def _timing_scale(art: dict) -> float | None:
+    c = art.get("env", {}).get("calib_us")
+    return float(c) if isinstance(c, (int, float)) and c > 0 else None
+
+
+def _rows_by_name(art: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in art.get("rows", [])}
+
+
+def compare_suite(base: dict, new: dict, *, threshold: float,
+                  metric_threshold: float, ignore_timings: bool,
+                  min_us: float) -> tuple[list[str], list[str]]:
+    """Returns (problems, notes) for one suite's artifact pair."""
+    problems: list[str] = []
+    notes: list[str] = []
+    suite = base.get("suite", "?")
+    for art, side in ((base, "baseline"), (new, "new")):
+        bad = validate_artifact(art)
+        if bad:
+            problems.append(f"{suite}: {side} artifact invalid: {bad}")
+    if problems:
+        return problems, notes
+
+    if base["ok"] and not new["ok"]:
+        problems.append(f"{suite}: suite now FAILS (was ok in baseline)")
+        return problems, notes
+
+    sb, sn = _timing_scale(base), _timing_scale(new)
+    normalised = sb is not None and sn is not None
+    if not normalised:
+        notes.append(f"{suite}: no calib_us on both sides — comparing "
+                     f"raw timings")
+
+    brows, nrows = _rows_by_name(base), _rows_by_name(new)
+    agg_b = agg_n = 0.0
+    for name, br in brows.items():
+        nr = nrows.get(name)
+        if nr is None:
+            problems.append(f"{suite}: row {name!r} missing from new run")
+            continue
+        # --- timing (aggregate gate; per-row outliers as notes) ---
+        if not ignore_timings:
+            b_t = br["us_per_call"] / (sb if normalised else 1.0)
+            n_t = nr["us_per_call"] / (sn if normalised else 1.0)
+            agg_b += b_t
+            agg_n += n_t
+            if br["us_per_call"] >= min_us and n_t > b_t * (1.0 + threshold):
+                notes.append(
+                    f"{suite}: {name} row slower: {n_t / b_t:.2f}x the "
+                    f"baseline ({br['us_per_call']:.0f}us -> "
+                    f"{nr['us_per_call']:.0f}us"
+                    + (", calib-normalised)" if normalised else ")"))
+        # --- derived metrics ---
+        for k, bv in br["derived"].items():
+            if k not in nr["derived"]:
+                problems.append(f"{suite}: {name} metric {k!r} missing "
+                                f"from new run")
                 continue
-        d = json.load(open(f))
-        recs[(d["arch"], d["shape"], d["mesh"])] = d
-    lines = [
-        "| arch | shape | mesh | status | HLO flops/dev | wire B/dev | "
-        "args B/dev | temp B/dev | compile s |",
-        "|---|---|---|---|---|---|---|---|---|",
-    ]
-    ok = skip = err = 0
-    archs = sorted({a for (a, _, _) in recs})
-    for a in archs:
-        for s in ORDER:
-            for m in ("single", "multi"):
-                d = recs.get((a, s, m))
-                if d is None:
-                    lines.append(f"| {a} | {s} | {m} | PENDING | | | | | |")
-                    continue
-                if d["status"] == "skipped":
-                    skip += 1
-                    lines.append(f"| {a} | {s} | {m} | skip (full-attn) "
-                                 f"| | | | | |")
-                    continue
-                if d["status"] != "ok":
-                    err += 1
-                    lines.append(f"| {a} | {s} | {m} | ERROR | | | | | |")
-                    continue
-                ok += 1
-                mem = d.get("memory", {})
-                lines.append(
-                    f"| {a} | {s} | {m} | ok | {human(d['flops'])} | "
-                    f"{human(d['collective_wire_bytes'])} | "
-                    f"{human(mem.get('argument_size_in_bytes', 0))} | "
-                    f"{human(mem.get('temp_size_in_bytes', 0))} | "
-                    f"{d['compile_s']} |")
-    header = (f"Dry-run status: {ok} ok / {skip} skipped (documented) / "
-              f"{err} errors.\n\n")
-    os.makedirs(os.path.dirname(out_md), exist_ok=True)
-    with open(out_md, "w") as fh:
-        fh.write(header + "\n".join(lines) + "\n")
-    print(header.strip())
-    return recs
+            nv = nr["derived"][k]
+            if _non_finite(bv) or _non_finite(nv):
+                # non-finite on EITHER side (even both, and even in the
+                # sanitized string form) is itself a failure — a
+                # baseline containing NaN must never gate anything green
+                problems.append(f"{suite}: {name} metric {k} non-finite: "
+                                f"{bv!r} -> {nv!r}")
+            elif isinstance(bv, (int, float)) and \
+                    isinstance(nv, (int, float)) and \
+                    not isinstance(bv, bool):
+                # METRIC_ABS_FLOOR: values at the float-rounding level
+                # (e.g. post-consensus residuals ~1e-33) differ across
+                # BLAS/SIMD paths — compare them absolutely at the floor.
+                rel = abs(nv - bv) / max(abs(bv), METRIC_ABS_FLOOR)
+                # 'not <=' keeps any residual NaN flagging
+                if not rel <= metric_threshold:
+                    problems.append(
+                        f"{suite}: {name} metric {k} drifted "
+                        f"{bv!r} -> {nv!r} (rel {rel:.2e})")
+            elif bv != nv:
+                problems.append(f"{suite}: {name} metric {k} changed "
+                                f"{bv!r} -> {nv!r}")
+    if not ignore_timings and agg_b > 0:
+        ratio = agg_n / agg_b
+        if ratio > 1.0 + threshold:
+            problems.append(
+                f"{suite}: aggregate timing regression: {ratio:.2f}x the "
+                f"baseline across {len(brows)} rows"
+                + (" (calib-normalised)" if normalised else ""))
+        else:
+            notes.append(f"{suite}: aggregate timing {ratio:.2f}x baseline")
+    extra = set(nrows) - set(brows)
+    if extra:
+        notes.append(f"{suite}: {len(extra)} new row(s) not in baseline")
+    return problems, notes
+
+
+def compare(base_set: dict[str, dict], new_set: dict[str, dict], *,
+            threshold: float, metric_threshold: float,
+            ignore_timings: bool, min_us: float,
+            suites: list[str] | None = None) -> tuple[list[str], list[str]]:
+    problems: list[str] = []
+    notes: list[str] = []
+    names = suites if suites else sorted(base_set)
+    for name in names:
+        if name not in base_set:
+            problems.append(f"{name}: no baseline artifact")
+            continue
+        if name not in new_set:
+            problems.append(f"{name}: artifact missing from new set")
+            continue
+        p, n = compare_suite(base_set[name], new_set[name],
+                             threshold=threshold,
+                             metric_threshold=metric_threshold,
+                             ignore_timings=ignore_timings, min_us=min_us)
+        problems += p
+        notes += n
+    for name in sorted(set(new_set) - set(base_set)):
+        notes.append(f"{name}: new suite, no baseline yet")
+    return problems, notes
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="dir (or file) of BENCH_*.json")
+    ap.add_argument("new", help="dir (or file) of BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative timing-regression threshold "
+                         "(default 0.2 = 20%%)")
+    ap.add_argument("--metric-threshold", type=float, default=1e-6,
+                    help="relative drift tolerance for derived metrics")
+    ap.add_argument("--ignore-timings", action="store_true")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="skip timing checks for baseline rows faster "
+                         "than this (noise floor)")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated subset to compare")
+    args = ap.parse_args(argv)
+
+    for p in (args.baseline, args.new):
+        if not Path(p).exists():
+            print(f"no such path: {p}", file=sys.stderr)
+            return 2
+    base_set = load_artifacts(args.baseline)
+    new_set = load_artifacts(args.new)
+    if not base_set:
+        print(f"no BENCH_*.json artifacts under {args.baseline}",
+              file=sys.stderr)
+        return 2
+
+    problems, notes = compare(
+        base_set, new_set, threshold=args.threshold,
+        metric_threshold=args.metric_threshold,
+        ignore_timings=args.ignore_timings, min_us=args.min_us,
+        suites=args.suites.split(",") if args.suites else None)
+
+    compared = sorted(set(base_set) & set(new_set))
+    print(f"compared suites: {compared}")
+    for n in notes:
+        print(f"note: {n}")
+    if problems:
+        print(f"\n{len(problems)} regression(s):")
+        for p in problems:
+            print(f"  REGRESSION {p}")
+        return 1
+    print("no regressions")
+    return 0
 
 
 if __name__ == "__main__":
-    run()
+    sys.exit(main())

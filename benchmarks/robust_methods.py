@@ -1,5 +1,9 @@
 """Paper Fig. 9: D^2 and QG-DSGDm (heterogeneity-robust methods) on the
-Base-(k+1) graph vs exponential-family baselines, alpha = 0.1."""
+Base-(k+1) graph vs exponential-family baselines, alpha = 0.1.
+
+Each method's four topologies run as ONE compiled sweep
+(repro.sim.sweep); methods differ structurally, so sweeps over methods
+stay separate compiled calls."""
 from __future__ import annotations
 
 import time
@@ -12,11 +16,15 @@ from repro.core.graphs import build_topology
 from repro.data.synthetic import dirichlet_classification
 from repro.models import mlp
 from repro.optim.decentralized import make_method
-from repro.sim.engine import simulate_decentralized
+from repro.sim.sweep import sweep_decentralized
 
 from .common import emit
+from .registry import register
+
+TOPOS = (("base", 1), ("base", 4), ("one_peer_exp", None), ("exp", None))
 
 
+@register("robust_methods", takes_steps=True)
 def run(n: int = 25, steps: int = 300, alpha: float = 0.1) -> dict:
     cfg = MLPConfig(input_dim=32, hidden=(64,), num_classes=10)
     data = dirichlet_classification(n, 512, dim=32, num_classes=10,
@@ -32,18 +40,18 @@ def run(n: int = 25, steps: int = 300, alpha: float = 0.1) -> dict:
         return mlp.accuracy(p, jnp.asarray(data.test_x),
                             jnp.asarray(data.test_y))
 
+    scheds = [build_topology(name, n, k) for name, k in TOPOS]
     results = {}
     for method_name in ("qg-dsgdm", "d2", "gt"):
-        for name, k in (("base", 1), ("base", 4), ("one_peer_exp", None),
-                        ("exp", None)):
-            sched = build_topology(name, n, k)
-            t0 = time.perf_counter()
-            res = simulate_decentralized(
-                loss_fn=mlp.loss_fn, params=params,
-                method=make_method(method_name), schedule=sched,
-                batches=batches, steps=steps, eta=0.03, eval_fn=eval_fn,
-                eval_every=steps - 1)
-            us = (time.perf_counter() - t0) * 1e6 / steps
+        t0 = time.perf_counter()
+        sw = sweep_decentralized(
+            loss_fn=mlp.loss_fn, params=params,
+            method=make_method(method_name), schedules=scheds,
+            batches=batches, steps=steps, eta=0.03, eval_fn=eval_fn,
+            eval_every=steps - 1)
+        us = (time.perf_counter() - t0) * 1e6 / steps / len(scheds)
+        for c, (name, k) in enumerate(TOPOS):
+            res = sw.run(c)
             label = (f"robust/{method_name}/{name}"
                      + (f"-k{k}" if k else ""))
             emit(label, us,

@@ -30,6 +30,7 @@ from repro.launch.shapes import INPUT_SHAPES, config_for_shape, text_len
 from repro.models.frontends import AUDIO_FRAMES
 
 from .common import emit
+from .registry import register
 
 CHIPS = 256
 
@@ -128,6 +129,7 @@ def _lever(r: dict) -> str:
             "model axis / comm-compute overlap (§Perf C1-C3)")
 
 
+@register("roofline")
 def run(dryrun_dir: str = "experiments/dryrun",
         out_md: str = "experiments/roofline.md") -> dict:
     rows = []

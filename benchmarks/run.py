@@ -1,55 +1,78 @@
-"""Benchmark runner — one function per paper table/figure.
+"""Benchmark runner over the suite registry (benchmarks/registry.py).
 
     PYTHONPATH=src python -m benchmarks.run [--only consensus,length,...]
+                                            [--json out/] [--steps N]
+                                            [--list] [--no-calibrate]
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit)
+and, with ``--json DIR``, writes one schema-versioned artifact
+``DIR/BENCH_<suite>.json`` per suite (see registry docstring for the
+schema; compare two sets with ``python -m benchmarks.report``).
+
+Exit codes: 0 all suites passed; 1 at least one suite failed (artifacts
+are still written, with ``ok=false`` + traceback); 2 bad usage
+(unknown suite name).
 Suites:
     consensus      — paper Fig. 1/6/21/23 (consensus rate)
     length         — paper Fig. 5/20 + Theorem 1 (schedule length)
     comm_cost      — paper Table 1/2 (degree / bytes / consensus rate)
     dsgd_hetero    — paper Fig. 7/8 (DSGD, Dirichlet heterogeneity)
     robust_methods — paper Fig. 9 (D^2 / QG-DSGDm / GT)
+    precision      — finite-time exactness under f64/f32/bf16
     roofline       — §Roofline table from the dry-run artifacts
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import traceback
+
+from . import registry
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
     ap.add_argument("--steps", type=int, default=300,
                     help="training steps for the learning benchmarks")
-    args = ap.parse_args()
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="write BENCH_<suite>.json artifacts into DIR")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered suites and exit")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="skip the timing-calibration microbenchmark")
+    args = ap.parse_args(argv)
 
-    from . import (comm_cost, consensus, dsgd_hetero, length, precision,
-                   robust_methods, roofline)
-    suites = {
-        "consensus": consensus.run,
-        "length": length.run,
-        "comm_cost": comm_cost.run,
-        "dsgd_hetero": lambda: dsgd_hetero.run(steps=args.steps),
-        "robust_methods": lambda: robust_methods.run(steps=args.steps),
-        "precision": precision.run,
-        "roofline": roofline.run,
-    }
-    names = args.only.split(",") if args.only else list(suites)
+    registry.load_all()
+    if args.list:
+        for s in registry.SUITES.values():
+            tag = "fast" if s.fast else "slow"
+            print(f"{s.name:16s} [{tag}] {s.description}")
+        return 0
+
+    names = args.only.split(",") if args.only else list(registry.SUITES)
+    unknown = [n for n in names if n not in registry.SUITES]
+    if unknown:
+        print(f"unknown suites: {unknown}; known: "
+              f"{sorted(registry.SUITES)}", file=sys.stderr)
+        return 2
+
+    env = registry.env_fingerprint(calibrate=not args.no_calibrate)
     print("name,us_per_call,derived")
     failed = []
     for n in names:
-        try:
-            suites[n]()
-        except Exception:
+        art = registry.run_suite(n, steps=args.steps, env=env)
+        if not art["ok"]:
             failed.append(n)
-            traceback.print_exc()
+            print(art["error"], file=sys.stderr)
+        if args.json:
+            path = registry.write_artifact(art, args.json)
+            print(f"# wrote {path}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
-        sys.exit(1)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Regenerate the committed benchmark baseline artifacts under
+# benchmarks/baselines/.  Deterministic by construction: every suite
+# pins its seeds internally and the step count is pinned here, so the
+# derived metrics (schedule lengths, degrees, consensus errors,
+# accuracies) are reproducible; timings vary by machine but report.py
+# normalises them via each artifact's env.calib_us calibration.
+#
+#     bash scripts/bench_baseline.sh [suites]
+#
+# Default suites are the fast CI lane (consensus,length,comm_cost).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+SUITES="${1:-consensus,length,comm_cost}"
+STEPS=300
+OUT=benchmarks/baselines
+
+mkdir -p "$OUT"
+PYTHONPATH=src python -m benchmarks.run --only "$SUITES" --steps "$STEPS" \
+    --json "$OUT"
+
+echo
+echo "Baseline artifacts:"
+ls -l "$OUT"/BENCH_*.json
+echo
+echo "Sanity self-diff (must report no regressions):"
+PYTHONPATH=src python -m benchmarks.report "$OUT" "$OUT" --threshold 0.2
+echo
+echo "Review and commit:  git add $OUT && git commit"

@@ -15,6 +15,11 @@ matrix directly — matrices are auto-wrapped); in the distributed runtime
 it is the compiled collective-permute plan (repro.dist.gossip), possibly
 with lazy self-averaging.  Methods never see the transport.
 
+Contract required by the scan/sweep engine (repro.sim): ``init`` and
+``step`` must be pure and trace-safe, and the state pytree structure
+returned by ``step`` must equal the one from ``init`` for every step —
+the state is a ``lax.scan`` carry and is vmapped over configs/seeds.
+
 Implemented (paper Sec. 6.2 & Fig. 9):
   * DSGD (+ heavy-ball momentum)       [Lian et al. 2017, Eq. (1)]
   * QG-DSGDm (quasi-global momentum)   [Lin et al. 2021]
@@ -24,6 +29,7 @@ Implemented (paper Sec. 6.2 & Fig. 9):
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Callable
 
 import jax
@@ -165,7 +171,17 @@ def GradientTracking() -> Method:
 METHOD_NAMES = ("dsgd", "dsgdm", "qg-dsgdm", "d2", "gt")
 
 
+@lru_cache(maxsize=None)
 def make_method(name: str, momentum: float = 0.9) -> Method:
+    """Build (and memoize) a method.  Methods are stateless frozen
+    closures, so returning the same object for the same arguments lets
+    ``jax.jit`` caches keyed on the method (the scan engine, the sweep
+    layer, repro.dist step factories) hit across calls instead of
+    recompiling identical programs."""
+    return _make_method(name, momentum)
+
+
+def _make_method(name: str, momentum: float) -> Method:
     if name == "dsgd":
         return DSGD(0.0)
     if name == "dsgdm":

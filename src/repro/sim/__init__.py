@@ -1,1 +1,3 @@
-from .engine import SimResult, simulate_decentralized
+from .engine import (SimResult, eval_mask, materialize_schedule, node_stack,
+                     simulate_decentralized, stack_batches)
+from .sweep import SweepResult, stack_schedules, sweep_decentralized

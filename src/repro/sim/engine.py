@@ -5,10 +5,33 @@ per-node gradients on per-node data, applies the decentralized method's
 update, and mixes with the round's matrix ``schedule.W(r)`` (dense
 ``W @ X`` — the numerical ground truth the distributed ppermute runtime is
 tested against).  Reproduces the paper's Sec. 6.2 experiments.
+
+Two backends over the same math:
+
+* ``backend="scan"`` (default): the whole run is ONE compiled
+  ``lax.scan`` over steps.  The round-robin mixing schedule is stacked
+  into a dense ``(L, n, n)`` tensor indexed per step, all batches are
+  stacked as scan inputs, and losses / eval metrics are accumulated
+  in-graph (eval under ``lax.cond`` so non-eval steps pay nothing).
+  The node-stacked parameter tree is donated to the compiled run.
+  Requires ``eval_fn`` (if given) to be jax-traceable.
+
+* ``backend="loop"``: the original per-step Python loop, one jitted
+  step per round.  Kept as the reference implementation — the scan
+  backend reproduces its losses / consensus / accuracy bit-exactly
+  (tests/test_sim_scan.py) while removing the per-step dispatch and
+  host sync that dominate small-model sweeps.
+
+The internal ``_scan_run`` is shared with :mod:`repro.sim.sweep`, which
+vmaps it over stacked topology configs and seeds to batch whole
+multi-topology experiments into a single XLA program.
 """
 from __future__ import annotations
 
+import contextlib
+import warnings
 from dataclasses import dataclass
+from functools import lru_cache, partial
 from typing import Callable
 
 import jax
@@ -38,38 +61,177 @@ def _consensus_error(params_n) -> jnp.ndarray:
     return tot / cnt
 
 
+# ---------------------------------------------------------------------------
+# shared building blocks
+# ---------------------------------------------------------------------------
+
+def node_stack(params, n: int):
+    """Broadcast a single-model pytree to the node-stacked layout."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape) + 0.0, params)
+
+
+def materialize_schedule(schedule: TopologySchedule, steps: int):
+    """Stack one period of the round-robin schedule into a dense
+    ``(L, n, n)`` float32 tensor plus the per-step round index
+    ``idx[t] = t % L`` (so scans never materialise ``steps`` matrices)."""
+    L = max(1, len(schedule))
+    Ws = jnp.asarray(np.stack([np.asarray(schedule.W(r), np.float64)
+                               for r in range(L)]).astype(np.float32))
+    idx = jnp.asarray(np.arange(steps, dtype=np.int32) % L)
+    return Ws, idx
+
+
+def stack_batches(batches: Callable, steps: int):
+    """Materialise ``batches(0..steps-1)`` with a leading step axis, for
+    use as ``lax.scan`` inputs."""
+    bs = [batches(r) for r in range(steps)]
+    return jax.tree.map(lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+                        *bs)
+
+
+def eval_mask(steps: int, eval_every: int) -> np.ndarray:
+    """Boolean step mask matching the loop backend's eval points:
+    ``r % eval_every == 0 or r == steps - 1``."""
+    m = np.arange(steps) % max(1, eval_every) == 0
+    m[-1] = True
+    return m
+
+
+@contextlib.contextmanager
+def donation_fallback_ok():
+    """The CPU backend has no buffer donation; XLA copies instead and jax
+    warns.  The donation hint is still correct (and effective) on
+    TPU/GPU, so silence just that fallback warning."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+
+def _make_train_step(loss_fn, method: Method, eta: float):
+    vgrad = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def train_step(params_n, state, W, batch):
+        losses, grads = vgrad(params_n, batch)
+        params_n, state = method.step(params_n, grads, state, W, eta)
+        return params_n, state, losses.mean()
+
+    return train_step
+
+
+def _make_eval_step(eval_fn):
+    def eval_step(params_n):
+        avg = jax.tree.map(lambda x: x.mean(axis=0), params_n)
+        acc = eval_fn(avg) if eval_fn is not None else 0.0
+        return (jnp.asarray(acc, jnp.float32),
+                jnp.asarray(_consensus_error(params_n), jnp.float32))
+
+    return eval_step
+
+
+def _scan_run(params_n, Ws, idx, mask, batches_st, *,
+              loss_fn, method: Method, eta: float, eval_fn):
+    """One full training run as a single ``lax.scan``.
+
+    Returns per-step ``(losses, accs, cons)`` — accs/cons are zeros on
+    non-eval steps (filtered by the caller with the same mask).  Pure in
+    its array arguments, so :mod:`repro.sim.sweep` can vmap it over
+    stacked configs (``Ws``/``idx``) and seeds (``params_n``).
+    """
+    train_step = _make_train_step(loss_fn, method, eta)
+    eval_step = _make_eval_step(eval_fn)
+    state = method.init(params_n)
+    zero = (jnp.float32(0.0), jnp.float32(0.0))
+
+    def body(carry, xs):
+        params_n, state = carry
+        i, m, batch = xs
+        params_n, state, loss = train_step(params_n, state, Ws[i], batch)
+        if eval_fn is None:
+            acc, cons = zero
+        else:
+            acc, cons = jax.lax.cond(m, eval_step, lambda _: zero, params_n)
+        return (params_n, state), (loss, acc, cons)
+
+    _, (losses, accs, cons) = jax.lax.scan(
+        body, (params_n, state), (idx, mask, batches_st))
+    return losses, accs, cons
+
+
+@lru_cache(maxsize=8)
+def compiled_scan_run(loss_fn, method: Method, eta: float, eval_fn):
+    """Memoized jitted runner: jax.jit's dispatch cache is keyed on the
+    wrapped callable's identity, so building a fresh partial+jit per
+    call would recompile identical programs.  Keyed on the closure
+    identities (NOT e.g. ``eval_fn is None`` — distinct eval closures
+    capture distinct test sets and must not share a runner); pair with
+    the memoized ``make_method`` so repeated runs of one setup share an
+    executable.  Entries pin their captured data + executable, hence
+    the small maxsize: fresh per-call closures simply rotate through
+    without benefit."""
+    return jax.jit(partial(_scan_run, loss_fn=loss_fn, method=method,
+                           eta=eta, eval_fn=eval_fn), donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# public entry point
+# ---------------------------------------------------------------------------
+
 def simulate_decentralized(
         *, loss_fn: Callable, params: dict, method: Method,
         schedule: TopologySchedule, batches: Callable, steps: int,
         eta: float, eval_fn: Callable | None = None,
         eval_every: int = 50, same_init: bool = True,
-        key=None) -> SimResult:
+        key=None, backend: str = "scan") -> SimResult:
     """batches(step) -> per-node batch pytree with leading axis n."""
+    if backend not in ("scan", "loop"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if steps <= 0:   # degenerate, matches the historical loop behaviour
+        return SimResult(np.asarray([], np.float32),
+                         np.asarray([], np.float32),
+                         np.asarray([], np.float32),
+                         np.asarray([], np.int64))
     n = schedule.n
-    params_n = jax.tree.map(
-        lambda p: jnp.broadcast_to(p[None], (n,) + p.shape) + 0.0, params)
+    params_n = node_stack(params, n)
+
+    if backend == "loop":
+        return _simulate_loop(loss_fn, params_n, method, schedule, batches,
+                              steps, eta, eval_fn, eval_every)
+
+    Ws, idx = materialize_schedule(schedule, steps)
+    mask_np = eval_mask(steps, eval_every)
+    batches_st = stack_batches(batches, steps)
+    run = compiled_scan_run(loss_fn, method, eta, eval_fn)
+    with donation_fallback_ok():
+        losses, accs, cons = run(params_n, Ws, idx, jnp.asarray(mask_np),
+                                 batches_st)
+    losses = np.asarray(losses)
+    if eval_fn is None:
+        return SimResult(losses, np.asarray([], np.float32),
+                         np.asarray([], np.float32),
+                         np.asarray([], np.int64))
+    return SimResult(losses, np.asarray(accs)[mask_np],
+                     np.asarray(cons)[mask_np], np.nonzero(mask_np)[0])
+
+
+def _simulate_loop(loss_fn, params_n, method, schedule, batches, steps,
+                   eta, eval_fn, eval_every) -> SimResult:
+    """Reference backend: per-step Python loop over jitted steps."""
     state = method.init(params_n)
-
-    grad_fn = jax.vmap(jax.grad(loss_fn))
-    loss_v = jax.vmap(loss_fn)
-
-    @jax.jit
-    def one_step(params_n, state, W, batch):
-        grads = grad_fn(params_n, batch)
-        loss = loss_v(params_n, batch).mean()
-        params_n, state = method.step(params_n, grads, state, W, eta)
-        return params_n, state, loss
+    train_step = jax.jit(_make_train_step(loss_fn, method, eta))
+    eval_step = jax.jit(_make_eval_step(eval_fn))
 
     losses, accs, cons, evs = [], [], [], []
     for r in range(steps):
-        batch = batches(r)
-        params_n, state, loss = one_step(params_n, state,
-                                         jnp.asarray(schedule.W(r)), batch)
+        params_n, state, loss = train_step(
+            params_n, state, jnp.asarray(schedule.W(r)), batches(r))
         losses.append(float(loss))
         if eval_fn is not None and (r % eval_every == 0 or r == steps - 1):
-            avg = jax.tree.map(lambda x: x.mean(axis=0), params_n)
-            accs.append(float(eval_fn(avg)))
-            cons.append(float(_consensus_error(params_n)))
+            acc, ce = eval_step(params_n)
+            accs.append(float(acc))
+            cons.append(float(ce))
             evs.append(r)
-    return SimResult(np.asarray(losses), np.asarray(accs),
-                     np.asarray(cons), np.asarray(evs))
+    return SimResult(np.asarray(losses, np.float32),
+                     np.asarray(accs, np.float32),
+                     np.asarray(cons, np.float32), np.asarray(evs))

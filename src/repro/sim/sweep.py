@@ -1,0 +1,131 @@
+"""Compiled multi-config sweeps over the scan simulation engine.
+
+The paper's headline results (Figs. 1/5/7-9, Tables 1-2) are comparisons
+*across* topologies / degrees / node counts.  Running them one
+``simulate_decentralized`` call at a time pays a fresh compile and a
+Python step loop per config.  This module batches the whole grid into
+ONE XLA program:
+
+* every schedule's round-robin period is stacked to a common-length
+  ``(C, Lmax, n, n)`` tensor with per-config round indices (padding is
+  never read: ``idx[c, t] = t % L_c``);
+* init params are stacked over a seed axis ``S``;
+* the single-run ``lax.scan`` (:func:`repro.sim.engine._scan_run`) is
+  vmapped over configs x seeds and jitted once.
+
+All configs in one sweep share the method, batches, eta and eval_fn
+(methods differ structurally, so sweeps over methods are separate
+compiled calls — see benchmarks/robust_methods.py).  Memory scales with
+``C * S`` resident copies of the node-stacked model, which is the
+intended trade for small paper-scale models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache, partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import TopologySchedule
+from repro.optim.decentralized import Method
+
+from . import engine
+from .engine import (SimResult, _scan_run, eval_mask, materialize_schedule,
+                     node_stack, stack_batches)
+
+
+@dataclass
+class SweepResult:
+    """Grid of runs: axis 0 = schedule/config, axis 1 = seed."""
+    names: list[str]
+    losses: np.ndarray          # (C, S, steps)
+    test_acc: np.ndarray        # (C, S, evals)
+    consensus: np.ndarray       # (C, S, evals)
+    eval_steps: np.ndarray      # (evals,)
+
+    def run(self, config: int, seed: int = 0) -> SimResult:
+        """A single (config, seed) cell, as a plain SimResult."""
+        return SimResult(self.losses[config, seed],
+                         self.test_acc[config, seed],
+                         self.consensus[config, seed], self.eval_steps)
+
+
+def stack_schedules(schedules: Sequence[TopologySchedule], steps: int):
+    """Pad + stack the schedules' periods into ``(C, Lmax, n, n)`` and
+    build the ``(C, steps)`` per-step round indices.  Delegates the
+    per-schedule materialization (dtype/rounding included) to
+    ``engine.materialize_schedule`` so sweep cells stay bit-exact with
+    single runs; padding rounds are identity matrices and are never
+    indexed (``idx[c, t] = t % L_c < L_c``)."""
+    n = schedules[0].n
+    if any(s.n != n for s in schedules):
+        raise ValueError("all schedules in one sweep must share n")
+    per = [materialize_schedule(s, steps) for s in schedules]
+    Lmax = max(W.shape[0] for W, _ in per)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    Ws = jnp.stack([
+        jnp.concatenate([W, jnp.broadcast_to(
+            eye, (Lmax - W.shape[0], n, n))]) if W.shape[0] < Lmax else W
+        for W, _ in per])
+    idx = jnp.stack([i for _, i in per])
+    return Ws, idx
+
+
+@lru_cache(maxsize=8)
+def compiled_sweep_run(loss_fn, method: Method, eta: float, eval_fn):
+    """Memoized jitted configs x seeds runner (see
+    ``engine.compiled_scan_run`` for why the jit wrapper itself must be
+    cached)."""
+    run1 = partial(_scan_run, loss_fn=loss_fn, method=method, eta=eta,
+                   eval_fn=eval_fn)
+    over_seeds = jax.vmap(run1, in_axes=(0, None, None, None, None))
+    over_cfgs = jax.vmap(over_seeds, in_axes=(None, 0, 0, None, None))
+    return jax.jit(over_cfgs, donate_argnums=(0,))
+
+
+def sweep_decentralized(
+        *, loss_fn: Callable, params, method: Method,
+        schedules: Sequence[TopologySchedule], batches: Callable,
+        steps: int, eta: float, eval_fn: Callable | None = None,
+        eval_every: int = 50) -> SweepResult:
+    """Run ``len(schedules) x n_seeds`` independent simulations as one
+    compiled computation.
+
+    ``params`` is either a single pytree (one seed) or a list/tuple of
+    pytrees (one per seed; e.g. ``[init(cfg, key_s) for key_s in keys]``).
+    Results match per-cell ``simulate_decentralized`` runs.
+    """
+    params_list = list(params) if isinstance(params, (list, tuple)) \
+        else [params]
+    if steps <= 0:
+        shape = (len(schedules), len(params_list), 0)
+        return SweepResult([s.name for s in schedules],
+                           np.zeros(shape, np.float32),
+                           np.zeros(shape, np.float32),
+                           np.zeros(shape, np.float32),
+                           np.asarray([], np.int64))
+    n = schedules[0].n
+    stacked = [node_stack(p, n) for p in params_list]
+    P = jax.tree.map(lambda *xs: jnp.stack(xs), *stacked)   # (S, n, ...)
+
+    Ws, idx = stack_schedules(schedules, steps)
+    mask_np = eval_mask(steps, eval_every)
+    batches_st = stack_batches(batches, steps)
+
+    run = compiled_sweep_run(loss_fn, method, eta, eval_fn)
+    with engine.donation_fallback_ok():
+        losses, accs, cons = run(P, Ws, idx, jnp.asarray(mask_np),
+                                 batches_st)
+
+    losses = np.asarray(losses)
+    names = [s.name + (f"-k{s.k}" if s.k else "") for s in schedules]
+    if eval_fn is None:
+        empty = np.zeros(losses.shape[:2] + (0,), np.float32)
+        return SweepResult(names, losses, empty, empty.copy(),
+                           np.asarray([], np.int64))
+    return SweepResult(names, losses, np.asarray(accs)[..., mask_np],
+                       np.asarray(cons)[..., mask_np],
+                       np.nonzero(mask_np)[0])

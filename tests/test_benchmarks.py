@@ -1,0 +1,225 @@
+"""Benchmark registry, runner, and artifact-diff behaviour (no heavy
+suites are executed — synthetic suites are registered and cleaned up)."""
+import json
+
+import pytest
+
+from benchmarks import common, registry, report
+from benchmarks import run as bench_run
+
+
+@pytest.fixture
+def temp_suite():
+    """Register throwaway suites; restore the registry afterwards."""
+    added = []
+
+    def add(name, fn, **kw):
+        registry.register(name, **kw)(fn)
+        added.append(name)
+        return name
+
+    yield add
+    for name in added:
+        registry.SUITES.pop(name, None)
+
+
+def _fake_env():
+    return {"python": "3.10", "jax": "x", "numpy": "y", "platform": "z",
+            "cpu_count": 1, "devices": ["cpu"], "calib_us": 100.0}
+
+
+def test_load_all_registers_every_suite_module():
+    suites = registry.load_all()
+    assert set(registry.SUITE_MODULES) <= set(suites)
+    for name in registry.FAST_SUITES:
+        assert suites[name].fast, name
+    assert suites["dsgd_hetero"].takes_steps
+
+
+def test_run_suite_artifact_is_schema_valid(temp_suite):
+    def ok_suite():
+        common.emit("demo/row", 123.4, "metric=7;note=hello")
+        return {"answer": 42}
+
+    temp_suite("_demo_ok", ok_suite)
+    art = registry.run_suite("_demo_ok", env=_fake_env())
+    assert registry.validate_artifact(art) == []
+    assert art["ok"] and art["error"] is None
+    assert art["metrics"] == {"answer": 42}
+    [row] = art["rows"]
+    assert row["name"] == "demo/row"
+    assert row["derived"] == {"metric": 7, "note": "hello"}
+    json.dumps(art)  # round-trippable
+
+
+def test_run_suite_captures_failure(temp_suite):
+    def boom():
+        common.emit("boom/row", 1.0, "x=1")
+        raise AssertionError("paper claim violated")
+
+    temp_suite("_demo_boom", boom)
+    art = registry.run_suite("_demo_boom", env=_fake_env())
+    assert not art["ok"]
+    assert "paper claim violated" in art["error"]
+    assert art["rows"]  # rows emitted before the failure are kept
+    assert registry.validate_artifact(art) == []
+
+
+def test_runner_exits_nonzero_on_failing_suite(temp_suite, tmp_path,
+                                               capsys):
+    def boom():
+        raise RuntimeError("broken benchmark")
+
+    temp_suite("_demo_boom2", boom)
+    rc = bench_run.main(["--only", "_demo_boom2", "--json", str(tmp_path),
+                         "--no-calibrate"])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "FAILED suites" in err
+    # artifact still written, marked failed
+    art = json.loads((tmp_path / "BENCH__demo_boom2.json").read_text())
+    assert art["ok"] is False
+
+
+def test_runner_rejects_unknown_suite(capsys):
+    assert bench_run.main(["--only", "no_such_suite"]) == 2
+    assert "unknown suites" in capsys.readouterr().err
+
+
+def test_runner_list(capsys):
+    assert bench_run.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "consensus" in out and "[fast]" in out
+
+
+def test_validate_artifact_flags_problems():
+    assert registry.validate_artifact({}) != []
+    art = {k: None for k in registry.REQUIRED_KEYS}
+    art.update(schema_version=registry.SCHEMA_VERSION, suite="s", ok=True,
+               env=_fake_env(), rows=[], metrics=None, created_unix=0.0,
+               wall_s=0.0, params={}, error=None)
+    assert registry.validate_artifact(art) == []
+    art["rows"] = [{"name": "x"}]
+    assert any("malformed" in p for p in registry.validate_artifact(art))
+
+
+def _artifact(suite="s", rows=(), ok=True, calib=100.0):
+    return {
+        "schema_version": registry.SCHEMA_VERSION, "suite": suite,
+        "created_unix": 0.0, "ok": ok, "error": None if ok else "tb",
+        "wall_s": 1.0, "params": {},
+        "env": {**_fake_env(), "calib_us": calib},
+        "rows": list(rows), "metrics": None,
+    }
+
+
+def _row(name, us, **derived):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+def _write(tmp_path, sub, arts):
+    d = tmp_path / sub
+    d.mkdir()
+    for a in arts:
+        (d / f"BENCH_{a['suite']}.json").write_text(json.dumps(a))
+    return str(d)
+
+
+def test_report_no_regression_on_identical_sets(tmp_path):
+    arts = [_artifact(rows=[_row("a", 1000.0, m=3)])]
+    b = _write(tmp_path, "base", arts)
+    n = _write(tmp_path, "new", arts)
+    assert report.main([b, n]) == 0
+
+
+def test_report_flags_aggregate_timing_regression(tmp_path):
+    b = _write(tmp_path, "base",
+               [_artifact(rows=[_row("a", 1000.0), _row("b", 1000.0)])])
+    n = _write(tmp_path, "new",
+               [_artifact(rows=[_row("a", 2000.0), _row("b", 2000.0)])])
+    assert report.main([b, n, "--threshold", "0.2"]) == 1
+    assert report.main([b, n, "--ignore-timings"]) == 0
+    # calib normalisation: same 2x slowdown but the new machine is 2x
+    # slower overall -> not a regression
+    slow = [_artifact(rows=[_row("a", 2000.0), _row("b", 2000.0)],
+                      calib=200.0)]
+    n2 = _write(tmp_path, "new2", slow)
+    assert report.main([b, n2, "--threshold", "0.2"]) == 0
+
+
+def test_report_flags_metric_drift_and_missing(tmp_path):
+    b = _write(tmp_path, "base",
+               [_artifact(rows=[_row("a", 1000.0, acc=0.95, tag="ok")])])
+    drift = _write(tmp_path, "drift",
+                   [_artifact(rows=[_row("a", 1000.0, acc=0.80,
+                                         tag="ok")])])
+    assert report.main([b, drift]) == 1
+    missing = _write(tmp_path, "missing", [_artifact(rows=[])])
+    assert report.main([b, missing]) == 1
+
+
+def test_report_flags_newly_failing_suite(tmp_path):
+    b = _write(tmp_path, "base", [_artifact(ok=True)])
+    n = _write(tmp_path, "new", [_artifact(ok=False)])
+    assert report.main([b, n]) == 1
+
+
+def test_report_usage_errors(tmp_path):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert report.main([str(empty), str(empty)]) == 2
+    assert report.main([str(tmp_path / "nope"), str(empty)]) == 2
+
+
+def test_report_flags_nan_metric(tmp_path):
+    """Non-finite metrics must never slip through the drift gate
+    (diverged training) — numeric NaN, the sanitized "nan" string form,
+    and even NaN on BOTH sides all flag."""
+    b = _write(tmp_path, "base",
+               [_artifact(rows=[_row("a", 1000.0, acc=0.95)])])
+    n = _write(tmp_path, "new",
+               [_artifact(rows=[_row("a", 1000.0, acc=float("nan"))])])
+    assert report.main([b, n]) == 1
+    bs = _write(tmp_path, "base_s",
+                [_artifact(rows=[_row("a", 1000.0, acc="nan")])])
+    ns = _write(tmp_path, "new_s",
+                [_artifact(rows=[_row("a", 1000.0, acc="nan")])])
+    assert report.main([bs, ns]) == 1  # both-NaN baseline is no excuse
+
+
+def test_report_near_zero_metrics_use_absolute_floor(tmp_path):
+    """Rounding-noise residuals (~1e-33) differ across BLAS builds and
+    must not flag at the default relative threshold."""
+    b = _write(tmp_path, "base",
+               [_artifact(rows=[_row("a", 1000.0, err=1.5e-33)])])
+    n = _write(tmp_path, "new",
+               [_artifact(rows=[_row("a", 1000.0, err=4.0e-33)])])
+    assert report.main([b, n]) == 0
+
+
+def test_artifact_sanitizes_non_finite_to_strings(temp_suite):
+    def nan_suite():
+        common.emit("nan/row", 1.0, "acc=nan")
+        return {"bad": float("nan"), "worse": float("inf")}
+
+    temp_suite("_demo_nan", nan_suite)
+    art = registry.run_suite("_demo_nan", env=_fake_env())
+    assert registry.validate_artifact(art) == []       # strict JSON ok
+    assert art["metrics"] == {"bad": "nan", "worse": "inf"}
+    assert art["rows"][0]["derived"]["acc"] == "nan"
+
+
+def test_recording_nested_removes_by_identity():
+    outer, inner = [], []
+    with common.recording(outer):
+        with common.recording(inner):
+            pass                       # both empty (equal) at inner exit
+        common.emit("x", 1.0, "a=1")
+    assert len(outer) == 1 and inner == []
+    assert common._RECORDERS == []
+
+
+def test_parse_derived_coercion():
+    d = common.parse_derived("a=1;b=2.5;c=1e-3;d=hi;e=5.4e+11x;flag")
+    assert d == {"a": 1, "b": 2.5, "c": 1e-3, "d": "hi",
+                 "e": "5.4e+11x", "flag": True}

@@ -1,0 +1,173 @@
+"""Scan-engine equivalence: the single-lax.scan backend and the vmapped
+sweep layer must reproduce the reference Python-loop engine bit-exactly
+on the paper's MLP workload (ISSUE 2 acceptance criterion)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_mlp import MLPConfig
+from repro.core.graphs import build_topology
+from repro.data.synthetic import dirichlet_classification
+from repro.models import mlp
+from repro.optim.decentralized import make_method
+from repro.sim.engine import eval_mask, simulate_decentralized
+from repro.sim.sweep import stack_schedules, sweep_decentralized
+
+KEY = jax.random.PRNGKey(0)
+N = 9
+
+
+def _setup(n=N, alpha=0.1, seed=3):
+    cfg = MLPConfig(input_dim=32, hidden=(64,), num_classes=10)
+    data = dirichlet_classification(n, 256, dim=32, num_classes=10,
+                                    alpha=alpha, margin=1.0, seed=seed)
+    params = mlp.init(cfg, KEY)
+
+    def batches(step, bs=32):
+        i = (step * bs) % (256 - bs)
+        return (jnp.asarray(data.node_x[:, i:i + bs]),
+                jnp.asarray(data.node_y[:, i:i + bs]))
+
+    def eval_fn(p):
+        return mlp.accuracy(p, jnp.asarray(data.test_x),
+                            jnp.asarray(data.test_y))
+
+    return cfg, params, batches, eval_fn
+
+
+@pytest.mark.parametrize("method_name", ["dsgdm", "qg-dsgdm", "d2", "gt"])
+def test_scan_matches_loop_bit_exact(method_name):
+    """Losses, consensus, accuracy, and eval steps: bitwise equal."""
+    _, params, batches, eval_fn = _setup()
+    kw = dict(loss_fn=mlp.loss_fn, params=params,
+              method=make_method(method_name),
+              schedule=build_topology("base", N, 2), batches=batches,
+              steps=40, eta=0.03, eval_fn=eval_fn, eval_every=15)
+    loop = simulate_decentralized(backend="loop", **kw)
+    scan = simulate_decentralized(backend="scan", **kw)
+    np.testing.assert_array_equal(loop.eval_steps, scan.eval_steps)
+    np.testing.assert_array_equal(loop.losses, scan.losses)
+    np.testing.assert_array_equal(loop.consensus, scan.consensus)
+    np.testing.assert_array_equal(loop.test_acc, scan.test_acc)
+
+
+def test_scan_without_eval_fn_matches_loop():
+    _, params, batches, _ = _setup()
+    kw = dict(loss_fn=mlp.loss_fn, params=params, method=make_method("dsgd"),
+              schedule=build_topology("ring", N), batches=batches,
+              steps=25, eta=0.05)
+    loop = simulate_decentralized(backend="loop", **kw)
+    scan = simulate_decentralized(backend="scan", **kw)
+    np.testing.assert_array_equal(loop.losses, scan.losses)
+    assert scan.test_acc.size == 0 and scan.consensus.size == 0
+
+
+def test_zero_steps_returns_empty_result():
+    _, params, batches, _ = _setup()
+    for backend in ("scan", "loop"):
+        res = simulate_decentralized(
+            loss_fn=mlp.loss_fn, params=params, method=make_method("dsgd"),
+            schedule=build_topology("ring", N), batches=batches, steps=0,
+            eta=0.1, backend=backend)
+        assert res.losses.size == 0 and res.eval_steps.size == 0
+    sw = sweep_decentralized(
+        loss_fn=mlp.loss_fn, params=params, method=make_method("dsgd"),
+        schedules=[build_topology("ring", N)], batches=batches, steps=0,
+        eta=0.1)
+    assert sw.losses.shape == (1, 1, 0)
+
+
+def test_unknown_backend_rejected():
+    _, params, batches, _ = _setup()
+    with pytest.raises(ValueError, match="backend"):
+        simulate_decentralized(
+            loss_fn=mlp.loss_fn, params=params, method=make_method("dsgd"),
+            schedule=build_topology("ring", N), batches=batches, steps=2,
+            eta=0.1, backend="nope")
+
+
+def test_sweep_matches_independent_runs():
+    """Every (schedule, seed) cell of one compiled sweep equals its own
+    independent simulate_decentralized run, bit-exactly."""
+    cfg, _, batches, eval_fn = _setup()
+    seeds = [mlp.init(cfg, jax.random.PRNGKey(s)) for s in (0, 7)]
+    scheds = [build_topology("base", N, 1), build_topology("exp", N),
+              build_topology("ring", N)]
+    steps = 30
+    sw = sweep_decentralized(
+        loss_fn=mlp.loss_fn, params=seeds, method=make_method("dsgdm"),
+        schedules=scheds, batches=batches, steps=steps, eta=0.05,
+        eval_fn=eval_fn, eval_every=10)
+    assert sw.losses.shape == (3, 2, steps)
+    for c, sched in enumerate(scheds):
+        for s, p in enumerate(seeds):
+            ref = simulate_decentralized(
+                loss_fn=mlp.loss_fn, params=p, method=make_method("dsgdm"),
+                schedule=sched, batches=batches, steps=steps, eta=0.05,
+                eval_fn=eval_fn, eval_every=10)
+            cell = sw.run(c, s)
+            np.testing.assert_array_equal(ref.losses, cell.losses)
+            np.testing.assert_array_equal(ref.test_acc, cell.test_acc)
+            np.testing.assert_array_equal(ref.consensus, cell.consensus)
+            np.testing.assert_array_equal(ref.eval_steps, cell.eval_steps)
+
+
+def test_sweep_single_params_and_no_eval():
+    _, params, batches, _ = _setup()
+    scheds = [build_topology("base", N, 1), build_topology("ring", N)]
+    sw = sweep_decentralized(
+        loss_fn=mlp.loss_fn, params=params, method=make_method("dsgd"),
+        schedules=scheds, batches=batches, steps=10, eta=0.05)
+    assert sw.losses.shape == (2, 1, 10)
+    assert sw.test_acc.shape == (2, 1, 0)
+    assert np.isfinite(sw.losses).all()
+
+
+def test_sweep_rejects_mismatched_n():
+    _, params, batches, _ = _setup()
+    with pytest.raises(ValueError, match="share n"):
+        sweep_decentralized(
+            loss_fn=mlp.loss_fn, params=params, method=make_method("dsgd"),
+            schedules=[build_topology("ring", N),
+                       build_topology("ring", N + 1)],
+            batches=batches, steps=4, eta=0.05)
+
+
+def test_stack_schedules_padding_never_read():
+    """Configs with different period lengths: idx stays within each
+    schedule's own period."""
+    scheds = [build_topology("base", 8, 1),     # multi-round
+              build_topology("ring", 8)]        # single-round
+    steps = 11
+    Ws, idx = stack_schedules(scheds, steps)
+    assert Ws.shape[0] == 2 and idx.shape == (2, steps)
+    for c, s in enumerate(scheds):
+        L = max(1, len(s))
+        assert int(np.asarray(idx)[c].max()) < L
+        for r in range(L):
+            np.testing.assert_allclose(np.asarray(Ws)[c, r],
+                                       np.asarray(s.W(r), np.float32),
+                                       atol=0)
+
+
+def test_compiled_runners_are_memoized():
+    """Same (loss, method, eta, eval) setup must reuse one jitted
+    runner, so repeated runs/sweeps share a compiled executable."""
+    from repro.sim.engine import compiled_scan_run
+    from repro.sim.sweep import compiled_sweep_run
+    m = make_method("dsgdm")
+    assert make_method("dsgdm") is m
+    assert compiled_scan_run(mlp.loss_fn, m, 0.05, None) \
+        is compiled_scan_run(mlp.loss_fn, m, 0.05, None)
+    assert compiled_sweep_run(mlp.loss_fn, m, 0.05, None) \
+        is compiled_sweep_run(mlp.loss_fn, m, 0.05, None)
+    assert compiled_scan_run(mlp.loss_fn, m, 0.01, None) \
+        is not compiled_scan_run(mlp.loss_fn, m, 0.05, None)
+
+
+def test_eval_mask_matches_loop_condition():
+    for steps, every in ((10, 3), (7, 50), (5, 1)):
+        m = eval_mask(steps, every)
+        want = [(r % every == 0 or r == steps - 1) for r in range(steps)]
+        assert m.tolist() == want
