@@ -6,9 +6,9 @@ from __future__ import annotations
 
 import time
 
-from repro.core.graphs import build_topology
 from repro.core.mixing import (is_finite_time_convergent,
                                spectral_consensus_rate)
+from repro.topology import TopologySpec, build_schedule
 
 from .common import emit
 from .registry import register
@@ -26,7 +26,7 @@ def run(ns=(25, 64, 256)) -> dict:
     for n in ns:
         for name, k in TOPOS:
             t0 = time.perf_counter()
-            s = build_topology(name, n, k)
+            s = build_schedule(TopologySpec(name=name, n=n, k=k))
             us = (time.perf_counter() - t0) * 1e6
             gb = s.bytes_per_node_per_round(PARAM_BYTES) / 1e9
             if len(s.Ws) == 1 and not s.finite_time:
@@ -37,7 +37,8 @@ def run(ns=(25, 64, 256)) -> dict:
                         if is_finite_time_convergent(s) else "asymptotic")
             label = f"comm/{name}" + (f"-k{k}" if k else "") + f"/n{n}"
             emit(label, us,
-                 f"maxdeg={s.max_degree};GB_per_node_round={gb:.1f};{rate}")
+                 f"maxdeg={s.max_degree};GB_per_node_round={gb:.1f};{rate}",
+                 spec=s.spec)
             out[label] = dict(deg=s.max_degree, gb=gb)
     # headline: Base-(k+1) cheaper than exp for k < ceil(log2 n)
     for n in ns:

@@ -46,10 +46,17 @@ def parse_derived(derived: str) -> dict:
     return out
 
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+def emit(name: str, us_per_call: float, derived: str, spec=None) -> None:
+    """Emit one benchmark row.  ``spec`` (a ``repro.topology.TopologySpec``
+    or its dict form) is embedded verbatim in the structured row — NOT
+    the CSV — so artifact diffs are attributable to an exact topology
+    configuration; ``benchmarks/spec_check.py`` gates its presence and
+    validity in CI."""
     print(f"{name},{us_per_call:.1f},{derived}")
     row = {"name": name, "us_per_call": float(us_per_call),
            "derived": parse_derived(derived)}
+    if spec is not None:
+        row["spec"] = spec if isinstance(spec, dict) else spec.to_dict()
     for rec in _RECORDERS:
         rec.append(row)
 

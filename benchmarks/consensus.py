@@ -11,8 +11,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.graphs import build_topology
 from repro.core.mixing import consensus_error_curve
+from repro.topology import TopologySpec, build_schedule
 
 from .common import emit, timed
 from .registry import register
@@ -28,7 +28,7 @@ def run() -> dict:
     results = {}
     for n in CASES:
         for name, k in TOPOS:
-            sched = build_topology(name, n, k)
+            sched = build_schedule(TopologySpec(name=name, n=n, k=k))
             iters = max(30, 3 * len(sched))
             curve, us = timed(
                 lambda: consensus_error_curve(sched, iters, seed=1, d=16),
@@ -38,7 +38,8 @@ def run() -> dict:
             label = f"consensus/{name}" + (f"-k{k}" if k else "") + f"/n{n}"
             emit(label, us,
                  f"finite_rounds={hit};len={len(sched)};"
-                 f"maxdeg={sched.max_degree};err10={rel[min(10, iters)]:.2e}")
+                 f"maxdeg={sched.max_degree};err10={rel[min(10, iters)]:.2e}",
+                 spec=sched.spec)
             results[label] = dict(hit=int(hit), length=len(sched),
                                   maxdeg=sched.max_degree)
     # paper claim checks

@@ -15,11 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_mlp import MLPConfig
-from repro.core.graphs import build_topology
 from repro.data.synthetic import dirichlet_classification
 from repro.models import mlp
 from repro.optim.decentralized import make_method
 from repro.sim.sweep import sweep_decentralized
+from repro.topology import TopologySpec, build_schedule
 
 from .common import emit
 from .registry import register
@@ -46,7 +46,8 @@ def run(n: int = 25, steps: int = 250, alphas=(10.0, 0.05)) -> dict:
             return mlp.accuracy(p, jnp.asarray(data.test_x),
                                 jnp.asarray(data.test_y))
 
-        scheds = [build_topology(name, n, k) for name, k in TOPOS]
+        scheds = [build_schedule(TopologySpec(name=name, n=n, k=k))
+                  for name, k in TOPOS]
         t0 = time.perf_counter()
         sw = sweep_decentralized(
             loss_fn=mlp.loss_fn, params=params,
@@ -59,7 +60,7 @@ def run(n: int = 25, steps: int = 250, alphas=(10.0, 0.05)) -> dict:
             label = (f"dsgd_hetero/a{alpha}/{name}" + (f"-k{k}" if k else ""))
             emit(label, us,
                  f"acc={res.test_acc[-1]:.4f};consensus={res.consensus[-1]:.3e};"
-                 f"maxdeg={scheds[c].max_degree}")
+                 f"maxdeg={scheds[c].max_degree}", spec=scheds[c].spec)
             results[label] = dict(acc=float(res.test_acc[-1]),
                                   cons=float(res.consensus[-1]))
     return results

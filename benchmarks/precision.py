@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graphs import build_topology
+from repro.topology import TopologySpec, build_schedule
 
 from .common import emit
 from .registry import register
@@ -33,8 +33,8 @@ def _run_curve(sched, iters, dtype, seed=0, d=256):
 @register("precision")
 def run(n: int = 21) -> dict:
     out = {}
-    base = build_topology("base", n, 2)
-    ring = build_topology("ring", n)
+    base = build_schedule(TopologySpec(name="base", n=n, k=2))
+    ring = build_schedule(TopologySpec(name="ring", n=n))
     budget = len(base)
     for dtype, name in ((jnp.float64, "f64"), (jnp.float32, "f32"),
                         (jnp.bfloat16, "bf16")):
@@ -44,7 +44,8 @@ def run(n: int = 21) -> dict:
         e_ring = _run_curve(ring, budget, dtype)
         emit(f"precision/{name}/n{n}", 0.0,
              f"base_residual={e_base:.3e};ring_residual={e_ring:.3e};"
-             f"advantage={e_ring / max(e_base, 1e-300):.1e}x")
+             f"advantage={e_ring / max(e_base, 1e-300):.1e}x",
+             spec=base.spec)   # the row's subject is the Base-(k+1) graph
         out[name] = (e_base, e_ring)
     jax.config.update("jax_enable_x64", False)
     # exactness claim holds to rounding: bf16 residual << ring error

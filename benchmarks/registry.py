@@ -173,6 +173,10 @@ def validate_artifact(art: dict) -> list[str]:
                 continue
             if not isinstance(r["derived"], dict):
                 problems.append(f"row {i} derived must be a dict")
+            # deep spec validation lives in benchmarks/spec_check.py;
+            # the schema only constrains the embedding's shape
+            if "spec" in r and not isinstance(r["spec"], dict):
+                problems.append(f"row {i} spec must be a dict")
     try:
         # allow_nan=False: bare NaN/Infinity tokens are not valid JSON
         json.dumps(art, allow_nan=False)

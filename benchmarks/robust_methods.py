@@ -12,11 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.paper_mlp import MLPConfig
-from repro.core.graphs import build_topology
 from repro.data.synthetic import dirichlet_classification
 from repro.models import mlp
 from repro.optim.decentralized import make_method
 from repro.sim.sweep import sweep_decentralized
+from repro.topology import TopologySpec, build_schedule
 
 from .common import emit
 from .registry import register
@@ -40,7 +40,8 @@ def run(n: int = 25, steps: int = 300, alpha: float = 0.1) -> dict:
         return mlp.accuracy(p, jnp.asarray(data.test_x),
                             jnp.asarray(data.test_y))
 
-    scheds = [build_topology(name, n, k) for name, k in TOPOS]
+    scheds = [build_schedule(TopologySpec(name=name, n=n, k=k))
+              for name, k in TOPOS]
     results = {}
     for method_name in ("qg-dsgdm", "d2", "gt"):
         t0 = time.perf_counter()
@@ -56,6 +57,6 @@ def run(n: int = 25, steps: int = 300, alpha: float = 0.1) -> dict:
                      + (f"-k{k}" if k else ""))
             emit(label, us,
                  f"acc={res.test_acc[-1]:.4f};"
-                 f"consensus={res.consensus[-1]:.3e}")
+                 f"consensus={res.consensus[-1]:.3e}", spec=scheds[c].spec)
             results[label] = float(res.test_acc[-1])
     return results

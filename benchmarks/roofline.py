@@ -160,6 +160,9 @@ def run(dryrun_dir: str = "experiments/dryrun",
                   ("collective", t_x), key=lambda kv: kv[1])[0]
         rows.append({
             "arch": rec["arch"], "shape": rec["shape"],
+            "spec": rec.get("spec"),     # dryrun artifacts embed the
+                                         # canonical topology spec
+
             "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
             "dominant": dom,
             "model_flops": mf, "hlo_flops_analytic": ana,
@@ -182,7 +185,7 @@ def run(dryrun_dir: str = "experiments/dryrun",
         emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
              f"tc={r['t_compute_s']:.3e};tm={r['t_memory_s']:.3e};"
              f"tx={r['t_collective_s']:.3e};dom={r['dominant']};"
-             f"useful={r['useful_ratio']:.2f}")
+             f"useful={r['useful_ratio']:.2f}", spec=r.get("spec"))
         lines.append(
             f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
             f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "

@@ -1,0 +1,100 @@
+"""Gate: every row in a set of ``BENCH_*.json`` artifacts must embed a
+valid, registry-canonical ``TopologySpec``.
+
+    PYTHONPATH=src python -m benchmarks.spec_check OUT_DIR [OUT_DIR ...]
+        [--suites a,b]
+
+A row's ``spec`` is valid iff it parses as ``TopologySpec.from_dict``,
+survives registry canonicalization (name registered, n/k legal,
+declared extras only), and round-trips through JSON unchanged — i.e.
+the row is attributable to an exact topology configuration.  Exit code
+1 lists every offending row; 2 is bad usage (no artifacts found).
+
+The CI bench lane runs this over the artifacts the PR just emitted, so
+a suite can never silently drop or corrupt its spec embedding.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.topology import TopologySpec, canonicalize
+
+from .registry import load_artifacts
+
+# Suites whose rows are not all topology-attributable: roofline covers
+# the serving path too (prefill/decode dry-run cells have no gossip
+# topology), so a missing spec is legitimate there — any spec that IS
+# embedded (the train rows) is still fully validated.
+NON_TOPOLOGY_SUITES = frozenset({"roofline"})
+
+
+def check_artifact(art: dict) -> list[str]:
+    """Returns a list of problems (empty = every row carries a valid
+    spec)."""
+    problems = []
+    suite = art.get("suite", "?")
+    rows = art.get("rows") or []
+    for i, row in enumerate(rows):
+        name = row.get("name", f"#{i}")
+        d = row.get("spec")
+        if d is None:
+            if suite not in NON_TOPOLOGY_SUITES:
+                problems.append(f"{suite}: row {name!r} has no embedded "
+                                f"spec")
+            continue
+        try:
+            spec = TopologySpec.from_dict(d)
+            canon = canonicalize(spec)
+        except (ValueError, TypeError) as e:
+            problems.append(f"{suite}: row {name!r} spec invalid: {e}")
+            continue
+        if canon != spec:
+            problems.append(
+                f"{suite}: row {name!r} spec is not canonical "
+                f"({spec.to_json()} != {canon.to_json()})")
+        elif TopologySpec.from_json(spec.to_json()) != spec:
+            problems.append(f"{suite}: row {name!r} spec does not "
+                            f"round-trip through JSON")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+",
+                    help="dirs (or files) of BENCH_*.json artifacts")
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated subset to check")
+    args = ap.parse_args(argv)
+
+    arts: dict[str, dict] = {}
+    for p in args.paths:
+        if not Path(p).exists():
+            print(f"no such path: {p}", file=sys.stderr)
+            return 2
+        arts.update(load_artifacts(p))
+    if args.suites:
+        only = args.suites.split(",")
+        arts = {k: v for k, v in arts.items() if k in only}
+    if not arts:
+        print("no BENCH_*.json artifacts found", file=sys.stderr)
+        return 2
+
+    problems = []
+    total_rows = 0
+    for name in sorted(arts):
+        total_rows += len(arts[name].get("rows") or [])
+        problems += check_artifact(arts[name])
+    print(f"checked {total_rows} row(s) across {sorted(arts)}")
+    if problems:
+        print(f"\n{len(problems)} spec problem(s):")
+        for p in problems:
+            print(f"  SPEC {p}")
+        return 1
+    print("every row carries a valid canonical TopologySpec")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

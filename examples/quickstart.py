@@ -8,20 +8,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_mlp import MLPConfig
-from repro.core.graphs import build_topology
 from repro.core.mixing import consensus_error_curve
 from repro.data.synthetic import dirichlet_classification
 from repro.models import mlp
 from repro.optim.decentralized import make_method
 from repro.sim.engine import simulate_decentralized
+from repro.topology import TopologySpec, build_schedule
 
 
 def main():
     # --- 1. the paper's object: a finite-time convergent schedule -------
     n, k = 21, 2
-    sched = build_topology("base", n, k)
-    print(f"Base-{k + 1} graph, n={n}: {len(sched)} rounds, "
-          f"max degree {sched.max_degree} "
+    spec = TopologySpec(name="base", n=n, k=k)
+    sched = build_schedule(spec)
+    print(f"Base-{k + 1} graph, spec {sched.spec.to_json()}: "
+          f"{len(sched)} rounds, max degree {sched.max_degree} "
           f"(bound 2*log_{k + 1}({n})+2 = "
           f"{2 * np.log(n) / np.log(k + 1) + 2:.1f})")
     errs = consensus_error_curve(sched, len(sched), seed=0, d=8)
@@ -29,8 +30,9 @@ def main():
         bar = "#" * max(0, int(40 + 2 * np.log10(max(e, 1e-40))))
         print(f"  round {r:2d}  consensus err {e:10.3e}  {bar}")
     print("  -> exact consensus after the finite schedule. Compare ring:")
-    ring = consensus_error_curve(build_topology("ring", n), len(sched),
-                                 seed=0, d=8)
+    ring = consensus_error_curve(
+        build_schedule(TopologySpec(name="ring", n=n)), len(sched),
+        seed=0, d=8)
     print(f"  ring error after {len(sched)} rounds: {ring[-1]:.3e}")
 
     # --- 2. decentralized training under data heterogeneity -------------
@@ -50,12 +52,13 @@ def main():
 
     print(f"\nDSGD-momentum, n={n} nodes, Dirichlet alpha=0.1:")
     for name, kk in (("base", 2), ("exp", None), ("ring", None)):
-        s = build_topology(name, n, kk)
+        sp = TopologySpec(name=name, n=n, k=kk)
+        s = build_schedule(sp)
         res = simulate_decentralized(
             loss_fn=mlp.loss_fn, params=params, method=make_method("dsgdm"),
-            schedule=s, batches=batches, steps=150, eta=0.03,
+            schedule=sp, batches=batches, steps=150, eta=0.03,
             eval_fn=eval_fn, eval_every=149)
-        print(f"  {name + (f'-k{kk}' if kk else ''):10s} "
+        print(f"  {sp.label:10s} "
               f"maxdeg={s.max_degree}  acc={res.test_acc[-1]:.3f}  "
               f"consensus={res.consensus[-1]:.2e}")
 

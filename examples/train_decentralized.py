@@ -17,7 +17,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
     ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--topology", default="base")
+    ap.add_argument("--topology", default="base",
+                    help="registered topology name or inline JSON "
+                         "TopologySpec")
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--method", default="dsgdm")
     ap.add_argument("--devices", type=int, default=8)
@@ -62,7 +64,7 @@ def main():
     params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
     pc = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
     print(f"arch=granite-family ({pc / 1e6:.1f}M params)  nodes={n}  "
-          f"topology={args.topology}-k{args.k} "
+          f"topology={bundle.spec.label} spec={bundle.spec.to_json()} "
           f"({bundle.n_rounds} rounds)  method={args.method}")
     params_n = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (n,) + p.shape) + 0.0, params)

@@ -465,45 +465,22 @@ def _edge_schedule(name, n, rounds, k=None, finite_time=True):
 
 
 def build_topology(name: str, n: int, k: int | None = None) -> TopologySchedule:
-    """Factory. Names: base, simple_base, hyper_hypercube, one_peer_hypercube,
-    ring, torus, exp, one_peer_exp, complete (a.k.a. allreduce)."""
-    nodes = list(range(n))
-    if name == "base":
-        return _edge_schedule(name, n, base_graph(nodes, k), k)
-    if name == "simple_base":
-        return _edge_schedule(name, n, simple_base_graph(nodes, k), k)
-    if name == "hyper_hypercube":
-        return _edge_schedule(name, n, hyper_hypercube(nodes, k), k)
-    if name == "one_peer_hypercube":
-        return _edge_schedule(name, n, one_peer_hypercube(nodes), 1)
-    if name == "ring":
-        return TopologySchedule(name, n, [ring_matrix(n)], None, False, 2)
-    if name == "torus":
-        return TopologySchedule(name, n, [torus_matrix(n)], None, False, 4)
-    if name == "exp":
-        return TopologySchedule(name, n, [exponential_matrix(n)], None, False)
-    if name == "one_peer_exp":
-        ft = n & (n - 1) == 0
-        return TopologySchedule(name, n, one_peer_exponential_matrices(n),
-                                None, ft, 1)
-    if name in ("complete", "allreduce"):
-        return TopologySchedule(name, n, [complete_matrix(n)], None, True,
-                                n - 1)
-    if name == "d_equistatic":
-        deg = k or max(1, math.ceil(math.log2(n)))
-        return TopologySchedule(name, n, [d_equistatic_matrix(n, deg)],
-                                None, False, deg)
-    if name == "u_equistatic":
-        deg = k or max(2, 2 * math.ceil(math.log2(n) / 2))
-        return TopologySchedule(name, n, [u_equistatic_matrix(n, deg)],
-                                None, False, deg)
-    if name == "one_peer_equidyn":
-        return TopologySchedule(name, n, one_peer_equidyn_matrices(n),
-                                None, False, 1)
-    raise ValueError(f"unknown topology {name!r}")
+    """DEPRECATED shim over :mod:`repro.topology` (DESIGN.md Sec. 2).
+
+    Builds ``TopologySpec(name, n, k)`` through the registry and
+    returns the underlying ``TopologySchedule`` — bit-exact with the
+    historical string dispatch for every registered name, and cached by
+    spec (treat the result as immutable).  New code should construct a
+    spec and call ``repro.topology.build_schedule`` directly."""
+    from repro.topology import TopologySpec, build_schedule
+    return build_schedule(
+        TopologySpec(name=name, n=n, k=k)).as_topology_schedule()
 
 
-TOPOLOGY_NAMES = ("base", "simple_base", "hyper_hypercube",
-                  "one_peer_hypercube", "ring", "torus", "exp",
-                  "one_peer_exp", "complete", "allreduce",
-                  "d_equistatic", "u_equistatic", "one_peer_equidyn")
+def __getattr__(attr):
+    # TOPOLOGY_NAMES is a deprecated view over the registry (kept lazy:
+    # the registry imports this module's constructors).
+    if attr == "TOPOLOGY_NAMES":
+        from repro.topology import registered_names
+        return registered_names(include_aliases=True)
+    raise AttributeError(f"module {__name__!r} has no attribute {attr!r}")

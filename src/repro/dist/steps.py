@@ -19,10 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.graphs import TopologySchedule, build_topology
-from repro.core.ppermute_plan import SchedulePlan, compile_schedule
+from repro.core.graphs import TopologySchedule
+from repro.core.ppermute_plan import SchedulePlan
 from repro.models import model as M
 from repro.optim.decentralized import make_method
+from repro.topology import Schedule, TopologySpec, as_schedule, spec_from_cli
 
 from .gossip import make_gossip_mixer
 from .sharding import (ShardingRules, batch_partition_specs,
@@ -66,9 +67,12 @@ class TrainStepBundle:
     schedule: TopologySchedule
     plan: SchedulePlan
     param_shardings: Any
+    spec: TopologySpec | None = None   # canonical topology spec
 
 
-def make_train_step(cfg, mesh, *, topology: str = "base", k: int = 1,
+def make_train_step(cfg, mesh, *,
+                    topology: str | TopologySpec | Schedule = "base",
+                    k: int = 1,
                     method_name: str = "dsgdm", eta: float = 0.01,
                     param_dtype=jnp.bfloat16, remat: bool = True,
                     flatten_gossip: bool = False,
@@ -76,11 +80,22 @@ def make_train_step(cfg, mesh, *, topology: str = "base", k: int = 1,
                     batch_shapes=None, momentum: float = 0.9
                     ) -> TrainStepBundle:
     """One DSGD-family step: per-node grads -> method update -> gossip
-    round ``step % n_rounds`` over the mesh's node axis."""
+    round ``step % n_rounds`` over the mesh's node axis.
+
+    ``topology`` is a registered name (with ``k``), an inline JSON spec
+    string, a ``TopologySpec`` (its ``n`` must match the mesh's node
+    count) or a prebuilt ``Schedule``; the compiled ppermute plan comes
+    from the spec-memoized artifact cache."""
     rules = make_rules(mesh, arch_name=cfg.name, context="train")
     n = rules.n_nodes
-    sched = build_topology(topology, n, k)
-    plan = compile_schedule(sched)
+    if isinstance(topology, Schedule):
+        if topology.n != n:
+            raise ValueError(f"schedule built for n={topology.n} but the "
+                             f"mesh provides {n} gossip nodes")
+        sched = topology
+    else:
+        sched = as_schedule(spec_from_cli(topology, n=n, k=k))
+    plan = sched.as_ppermute_plan()
     method = make_method(method_name, momentum)
 
     p_sds = node_stack_specs(M.param_specs(cfg, param_dtype), n)
@@ -139,8 +154,9 @@ def make_train_step(cfg, mesh, *, topology: str = "base", k: int = 1,
     step_fn = jax.jit(_step, in_shardings=(psh, osh, bsh, scalar),
                       out_shardings=(psh, osh, scalar))
     return TrainStepBundle(step_fn=step_fn, n_nodes=n, n_rounds=len(sched),
-                           rules=rules, schedule=sched, plan=plan,
-                           param_shardings=psh)
+                           rules=rules,
+                           schedule=sched.as_topology_schedule(), plan=plan,
+                           param_shardings=psh, spec=sched.spec)
 
 
 # ---------------------------------------------------------------------------

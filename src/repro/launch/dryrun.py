@@ -127,7 +127,10 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
         step = jax.ShapeDtypeStruct((), jnp.int32)
         lowered = bundle.step_fn.lower(p, o, batch, step)
         meta = {"n_nodes": n_nodes, "n_rounds": bundle.n_rounds,
-                "gossip_axis": rules.node_axis}
+                "gossip_axis": rules.node_axis,
+                # canonical spec: makes the artifact attributable to an
+                # exact topology configuration (DESIGN.md Sec. 8)
+                "spec": bundle.spec.to_dict() if bundle.spec else None}
     elif info["kind"] == "prefill":
         batch = prefill_batch_shapes(cfg, batch=info["global_batch"],
                                      seq=info["seq"])
@@ -190,7 +193,9 @@ def main() -> None:
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="both")
-    ap.add_argument("--topology", default="base")
+    ap.add_argument("--topology", default="base",
+                    help="registered topology name or inline JSON "
+                         "TopologySpec (n is filled from the mesh)")
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--method", default="dsgdm")
     ap.add_argument("--flatten-gossip", action="store_true")
@@ -205,12 +210,25 @@ def main() -> None:
               "both": [False, True]}[args.mesh]
     os.makedirs(args.out, exist_ok=True)
 
+    # filename-safe topology token; inline JSON specs hash their
+    # NORMALIZED form (key order / whitespace don't change the tag, so
+    # the skip-existing cache recognises equivalent spellings) and
+    # already carry k, so no k suffix is appended for them
+    if args.topology.strip().startswith("{"):
+        import hashlib
+        norm = json.dumps(json.loads(args.topology), sort_keys=True,
+                          separators=(",", ":"))
+        topo_tag = "spec" + hashlib.sha256(norm.encode()).hexdigest()[:8]
+        topo_suffix = f"_{topo_tag}"
+    else:
+        topo_tag = args.topology
+        topo_suffix = f"_{topo_tag}k{args.k}"
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
                 tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
-                if args.topology != "base" or args.flatten_gossip:
-                    tag += f"_{args.topology}k{args.k}" + \
+                if topo_tag != "base" or args.flatten_gossip:
+                    tag += topo_suffix + \
                         ("_flat" if args.flatten_gossip else "")
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path):

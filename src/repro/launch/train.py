@@ -23,7 +23,10 @@ def main() -> None:
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--production-mesh", choices=["single", "multi"],
                     default=None)
-    ap.add_argument("--topology", default="base")
+    ap.add_argument("--topology", default="base",
+                    help="registered topology name, or an inline JSON "
+                         "TopologySpec, e.g. '{\"name\":\"base\",\"k\":2}' "
+                         "(n is filled from the mesh)")
     ap.add_argument("--k", type=int, default=1)
     ap.add_argument("--method", default="dsgdm")
     ap.add_argument("--eta", type=float, default=0.01)
@@ -71,6 +74,8 @@ def main() -> None:
                              param_dtype=dtype, remat=not args.reduced,
                              flatten_gossip=args.flatten_gossip)
     n = bundle.n_nodes
+    print(f"topology spec: {bundle.spec.to_json()} "
+          f"({bundle.n_rounds} rounds)")
     assert args.batch % n == 0
     b = args.batch // n
 

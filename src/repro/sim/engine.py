@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core.graphs import TopologySchedule
 from repro.optim.decentralized import Method
+from repro.topology import Schedule, TopologySpec, as_schedule
 
 
 @dataclass
@@ -71,15 +72,16 @@ def node_stack(params, n: int):
         lambda p: jnp.broadcast_to(p[None], (n,) + p.shape) + 0.0, params)
 
 
-def materialize_schedule(schedule: TopologySchedule, steps: int):
+def materialize_schedule(schedule, steps: int):
     """Stack one period of the round-robin schedule into a dense
     ``(L, n, n)`` float32 tensor plus the per-step round index
-    ``idx[t] = t % L`` (so scans never materialise ``steps`` matrices)."""
-    L = max(1, len(schedule))
-    Ws = jnp.asarray(np.stack([np.asarray(schedule.W(r), np.float64)
-                               for r in range(L)]).astype(np.float32))
-    idx = jnp.asarray(np.arange(steps, dtype=np.int32) % L)
-    return Ws, idx
+    ``idx[t] = t % L`` (so scans never materialise ``steps`` matrices).
+
+    Accepts a ``TopologySpec``, ``Schedule`` or legacy
+    ``TopologySchedule``; the stacking itself lives on
+    :meth:`repro.topology.Schedule.as_dense_stack`, so the artifact is
+    built once per topology configuration and shared across runs."""
+    return as_schedule(schedule).as_dense_stack(steps)
 
 
 def stack_batches(batches: Callable, steps: int):
@@ -180,13 +182,15 @@ def compiled_scan_run(loss_fn, method: Method, eta: float, eval_fn):
 
 def simulate_decentralized(
         *, loss_fn: Callable, params: dict, method: Method,
-        schedule: TopologySchedule, batches: Callable, steps: int,
+        schedule: TopologySpec | Schedule | TopologySchedule,
+        batches: Callable, steps: int,
         eta: float, eval_fn: Callable | None = None,
         eval_every: int = 50, same_init: bool = True,
         key=None, backend: str = "scan") -> SimResult:
     """batches(step) -> per-node batch pytree with leading axis n."""
     if backend not in ("scan", "loop"):
         raise ValueError(f"unknown backend {backend!r}")
+    schedule = as_schedule(schedule)
     if steps <= 0:   # degenerate, matches the historical loop behaviour
         return SimResult(np.asarray([], np.float32),
                          np.asarray([], np.float32),

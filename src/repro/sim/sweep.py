@@ -31,10 +31,10 @@ import numpy as np
 
 from repro.core.graphs import TopologySchedule
 from repro.optim.decentralized import Method
+from repro.topology import Schedule, TopologySpec, as_schedule
 
 from . import engine
-from .engine import (SimResult, _scan_run, eval_mask, materialize_schedule,
-                     node_stack, stack_batches)
+from .engine import SimResult, _scan_run, eval_mask, node_stack, stack_batches
 
 
 @dataclass
@@ -53,23 +53,23 @@ class SweepResult:
                          self.consensus[config, seed], self.eval_steps)
 
 
-def stack_schedules(schedules: Sequence[TopologySchedule], steps: int):
+def stack_schedules(
+        schedules: Sequence[TopologySpec | Schedule | TopologySchedule],
+        steps: int):
     """Pad + stack the schedules' periods into ``(C, Lmax, n, n)`` and
     build the ``(C, steps)`` per-step round indices.  Delegates the
-    per-schedule materialization (dtype/rounding included) to
-    ``engine.materialize_schedule`` so sweep cells stay bit-exact with
-    single runs; padding rounds are identity matrices and are never
-    indexed (``idx[c, t] = t % L_c < L_c``)."""
-    n = schedules[0].n
-    if any(s.n != n for s in schedules):
+    per-schedule materialization and identity padding (dtype/rounding
+    included) to ``repro.topology.Schedule.as_padded`` so sweep cells
+    stay bit-exact with single runs and padded stacks are memoized per
+    (spec, Lmax); padding rounds are never indexed
+    (``idx[c, t] = t % L_c < L_c``)."""
+    scheds = [as_schedule(s) for s in schedules]
+    n = scheds[0].n
+    if any(s.n != n for s in scheds):
         raise ValueError("all schedules in one sweep must share n")
-    per = [materialize_schedule(s, steps) for s in schedules]
-    Lmax = max(W.shape[0] for W, _ in per)
-    eye = jnp.eye(n, dtype=jnp.float32)
-    Ws = jnp.stack([
-        jnp.concatenate([W, jnp.broadcast_to(
-            eye, (Lmax - W.shape[0], n, n))]) if W.shape[0] < Lmax else W
-        for W, _ in per])
+    Lmax = max(max(1, len(s)) for s in scheds)
+    per = [s.as_padded(steps, Lmax) for s in scheds]
+    Ws = jnp.stack([W for W, _ in per])
     idx = jnp.stack([i for _, i in per])
     return Ws, idx
 
@@ -88,7 +88,8 @@ def compiled_sweep_run(loss_fn, method: Method, eta: float, eval_fn):
 
 def sweep_decentralized(
         *, loss_fn: Callable, params, method: Method,
-        schedules: Sequence[TopologySchedule], batches: Callable,
+        schedules: Sequence[TopologySpec | Schedule | TopologySchedule],
+        batches: Callable,
         steps: int, eta: float, eval_fn: Callable | None = None,
         eval_every: int = 50) -> SweepResult:
     """Run ``len(schedules) x n_seeds`` independent simulations as one
@@ -98,6 +99,7 @@ def sweep_decentralized(
     pytrees (one per seed; e.g. ``[init(cfg, key_s) for key_s in keys]``).
     Results match per-cell ``simulate_decentralized`` runs.
     """
+    schedules = [as_schedule(s) for s in schedules]
     params_list = list(params) if isinstance(params, (list, tuple)) \
         else [params]
     if steps <= 0:
@@ -121,7 +123,7 @@ def sweep_decentralized(
                                  batches_st)
 
     losses = np.asarray(losses)
-    names = [s.name + (f"-k{s.k}" if s.k else "") for s in schedules]
+    names = [s.label for s in schedules]
     if eval_fn is None:
         empty = np.zeros(losses.shape[:2] + (0,), np.float32)
         return SweepResult(names, losses, empty, empty.copy(),

@@ -1,0 +1,56 @@
+"""repro.topology — spec-driven topology registry and compiled artifacts.
+
+One API serves every backend (see DESIGN.md Sec. 2):
+
+    spec  = TopologySpec(name="base", n=25, k=2)     # the only currency
+    sched = build_schedule(spec)                     # registry + cache
+    Ws, idx = sched.as_dense_stack(steps)            # sim scan engine
+    plan    = sched.as_ppermute_plan()               # dist runtime
+    Wp, idx = sched.as_padded(steps, Lmax)           # vmapped sweep
+
+New topologies plug in with ``@register_topology`` (metadata: finite-time
+law, max-degree law, valid-n constraint, default-k rule) and are picked
+up by every consumer and the registry-parametrized conformance tests
+without touching either.  ``repro.core.graphs.build_topology`` /
+``TOPOLOGY_NAMES`` remain as thin deprecation shims over this package.
+"""
+from __future__ import annotations
+
+import json
+
+from .registry import (Registration, canonicalize, get_registration,
+                       register_topology, registered_names,
+                       unregister_topology)
+from .schedule import Schedule, as_schedule, build_schedule
+from .spec import TopologySpec
+
+from . import builtins as _builtins   # noqa: F401  (self-registration)
+
+__all__ = [
+    "TopologySpec", "Schedule", "Registration",
+    "build_schedule", "as_schedule", "canonicalize",
+    "register_topology", "unregister_topology", "get_registration",
+    "registered_names", "spec_from_cli",
+]
+
+
+def spec_from_cli(value, *, n: int, k: int | None = None,
+                  seed: int = 0) -> TopologySpec:
+    """Launcher helper: ``value`` is a topology name (``"base"``) or an
+    inline JSON spec (``'{"name":"base","k":2}'``); ``n`` comes from the
+    mesh / node count and fills an omitted ``"n"``.  Returns the
+    canonical spec."""
+    if isinstance(value, TopologySpec):
+        spec = value
+    else:
+        s = str(value).strip()
+        if s.startswith("{"):
+            d = json.loads(s)
+            d.setdefault("n", n)
+            spec = TopologySpec.from_dict(d)
+        else:
+            spec = TopologySpec(name=s, n=n, k=k, seed=seed)
+    if spec.n != n:
+        raise ValueError(f"topology spec names n={spec.n} but the runtime "
+                         f"provides n={n} nodes")
+    return canonicalize(spec)

@@ -1,0 +1,188 @@
+"""Schedule — one topology, three cached backend artifacts.
+
+A :class:`Schedule` wraps the numpy-level ``TopologySchedule`` (the
+round-robin sequence of doubly-stochastic mixing matrices) built from a
+canonical :class:`TopologySpec` and lazily derives, once each, the
+representation every backend consumes:
+
+* ``as_dense_stack(steps)`` — ``(L, n, n)`` float32 stack + per-step
+  round index for the scan simulation engine (``repro.sim.engine``);
+* ``as_ppermute_plan()`` — the edge-coloured collective-permute
+  ``SchedulePlan`` for the distributed runtime (``repro.dist``);
+* ``as_padded(steps, length)`` — the identity-padded dense stack for
+  the vmapped multi-config sweep (``repro.sim.sweep``).
+
+``build_schedule(spec)`` memoizes whole Schedules by canonical spec, so
+repeated runs of one configuration (sweeps, benchmarks, launch scripts)
+share both the constructed rounds and every derived artifact.  All
+three artifacts are bit-exact with the historical per-consumer code
+paths (tests/test_topology_spec.py).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core.graphs import TopologySchedule
+from repro.core.ppermute_plan import SchedulePlan, compile_schedule
+
+from .registry import canonicalize, get_registration
+from .spec import TopologySpec
+
+
+class Schedule:
+    """A built topology plus its memoized backend artifacts.
+
+    Delegates the ``TopologySchedule`` read API (``n``, ``W(r)``,
+    ``len``, ``max_degree``, ...) so existing consumers that duck-type
+    on the legacy object keep working unchanged.
+    """
+
+    def __init__(self, mats: TopologySchedule,
+                 spec: TopologySpec | None = None):
+        self._mats = mats
+        self.spec = spec
+        self._dense = None                  # (L, n, n) jnp.float32
+        self._idx: dict[int, object] = {}   # steps -> (steps,) jnp.int32
+        self._plan: SchedulePlan | None = None
+        self._padded: dict[int, object] = {}  # length -> (length, n, n)
+
+    # -- TopologySchedule delegation --------------------------------------
+
+    @property
+    def name(self) -> str:
+        return self._mats.name
+
+    @property
+    def n(self) -> int:
+        return self._mats.n
+
+    @property
+    def k(self) -> int | None:
+        return self._mats.k
+
+    @property
+    def Ws(self):
+        return self._mats.Ws
+
+    @property
+    def edge_rounds(self):
+        return self._mats.edge_rounds
+
+    @property
+    def finite_time(self) -> bool:
+        return self._mats.finite_time
+
+    @property
+    def max_degree(self) -> int:
+        return self._mats.max_degree
+
+    def W(self, r: int) -> np.ndarray:
+        return self._mats.W(r)
+
+    def __len__(self) -> int:
+        return len(self._mats)
+
+    def bytes_per_node_per_round(self, param_bytes: int) -> float:
+        return self._mats.bytes_per_node_per_round(param_bytes)
+
+    @property
+    def label(self) -> str:
+        """Legacy row label (``name`` / ``name-k<k>``), derived from the
+        built schedule's ``k`` for parity with pre-spec consumers."""
+        return self.name + (f"-k{self.k}" if self.k else "")
+
+    def as_topology_schedule(self) -> TopologySchedule:
+        return self._mats
+
+    def __repr__(self) -> str:
+        src = self.spec.to_json() if self.spec else f"name={self.name!r}"
+        return f"Schedule({src}, rounds={len(self)})"
+
+    # -- backend artifacts ------------------------------------------------
+
+    def as_dense_stack(self, steps: int):
+        """Scan-engine artifact: one period stacked into a dense
+        ``(L, n, n)`` float32 tensor plus the per-step round index
+        ``idx[t] = t % L`` (scans never materialise ``steps``
+        matrices).  The stack is built once per Schedule; the index
+        once per distinct ``steps``."""
+        import jax.numpy as jnp
+        L = max(1, len(self._mats))
+        if self._dense is None:
+            self._dense = jnp.asarray(
+                np.stack([np.asarray(self._mats.W(r), np.float64)
+                          for r in range(L)]).astype(np.float32))
+        idx = self._idx.get(steps)
+        if idx is None:
+            idx = jnp.asarray(np.arange(steps, dtype=np.int32) % L)
+            self._idx[steps] = idx
+        return self._dense, idx
+
+    def as_ppermute_plan(self) -> SchedulePlan:
+        """Distributed-runtime artifact: the rounds edge-coloured into
+        collective-permute slot plans (see DESIGN.md Sec. 3)."""
+        if self._plan is None:
+            self._plan = compile_schedule(self._mats)
+        return self._plan
+
+    def as_padded(self, steps: int, length: int | None = None):
+        """Sweep artifact: the dense stack padded with identity rounds
+        to ``length`` (a sweep's common ``Lmax``).  Padding rounds are
+        never indexed — ``idx[t] = t % L < L <= length``."""
+        import jax.numpy as jnp
+        W, idx = self.as_dense_stack(steps)
+        L = int(W.shape[0])
+        length = L if length is None else int(length)
+        if length < L:
+            raise ValueError(f"cannot pad a {L}-round schedule to "
+                             f"length {length}")
+        if length == L:
+            return W, idx
+        pad = self._padded.get(length)
+        if pad is None:
+            eye = jnp.eye(self.n, dtype=jnp.float32)
+            pad = jnp.concatenate(
+                [W, jnp.broadcast_to(eye, (length - L, self.n, self.n))])
+            self._padded[length] = pad
+        return pad, idx
+
+
+@lru_cache(maxsize=512)
+def _build_cached(canon: TopologySpec) -> Schedule:
+    reg = get_registration(canon.name)
+    mats = reg.build(canon)
+    # the registry's per-config law is the single source of truth for
+    # the finite-time attribute (constructors historically hard-coded a
+    # family-level constant, wrong at boundary configs like ring n=3)
+    mats.finite_time = bool(reg.finite_time(canon))
+    return Schedule(mats, spec=canon)
+
+
+def build_schedule(spec: TopologySpec) -> Schedule:
+    """Spec -> Schedule, memoized by the canonical spec.  Randomized
+    topologies embed their seed in the spec, so caching is always
+    deterministic.  Callers must treat the returned Schedule (and its
+    ``Ws``) as immutable."""
+    if not isinstance(spec, TopologySpec):
+        raise TypeError(f"build_schedule expects a TopologySpec, got "
+                        f"{type(spec).__name__}; wrap names with "
+                        f"TopologySpec(name=..., n=..., k=...)")
+    return _build_cached(canonicalize(spec))
+
+
+def as_schedule(obj) -> Schedule:
+    """Coerce any topology currency to a Schedule: a TopologySpec is
+    built (cached), a Schedule passes through, and a raw
+    TopologySchedule is wrapped (per-instance artifact caching, no
+    global memoization since there is no spec to key on)."""
+    if isinstance(obj, Schedule):
+        return obj
+    if isinstance(obj, TopologySpec):
+        return build_schedule(obj)
+    if isinstance(obj, TopologySchedule):
+        return Schedule(obj)
+    raise TypeError(
+        f"expected TopologySpec | Schedule | TopologySchedule, got "
+        f"{type(obj).__name__}")

@@ -1,11 +1,13 @@
-"""Benchmark registry, runner, and artifact-diff behaviour (no heavy
-suites are executed — synthetic suites are registered and cleaned up)."""
+"""Benchmark registry, runner, artifact-diff and spec-gate behaviour
+(no heavy suites are executed — synthetic suites are registered and
+cleaned up)."""
 import json
 
 import pytest
 
-from benchmarks import common, registry, report
+from benchmarks import common, registry, report, spec_check
 from benchmarks import run as bench_run
+from repro.topology import TopologySpec, canonicalize
 
 
 @pytest.fixture
@@ -207,6 +209,71 @@ def test_artifact_sanitizes_non_finite_to_strings(temp_suite):
     assert registry.validate_artifact(art) == []       # strict JSON ok
     assert art["metrics"] == {"bad": "nan", "worse": "inf"}
     assert art["rows"][0]["derived"]["acc"] == "nan"
+
+
+def _spec_row(name, spec, us=100.0, **derived):
+    return {"name": name, "us_per_call": us, "derived": derived,
+            "spec": spec}
+
+
+def test_emit_embeds_spec_in_rows_not_csv(capsys):
+    spec = canonicalize(TopologySpec("base", 9, 2))
+    rows = []
+    with common.recording(rows):
+        common.emit("x/spec", 1.0, "a=1", spec=spec)
+        common.emit("x/nospec", 1.0, "a=2")
+    out = capsys.readouterr().out
+    assert out.splitlines() == ["x/spec,1.0,a=1", "x/nospec,1.0,a=2"]
+    assert rows[0]["spec"] == spec.to_dict()
+    assert "spec" not in rows[1]
+
+
+def test_spec_check_accepts_valid_canonical_specs(tmp_path):
+    spec = canonicalize(TopologySpec("base", 25, 2)).to_dict()
+    d = _write(tmp_path, "ok",
+               [_artifact(rows=[_spec_row("a", spec)])])
+    assert spec_check.main([d]) == 0
+
+
+def test_spec_check_flags_missing_and_invalid_specs(tmp_path):
+    good = canonicalize(TopologySpec("ring", 9)).to_dict()
+    missing = _write(tmp_path, "missing",
+                     [_artifact(rows=[_row("a", 1.0, m=1)])])
+    assert spec_check.main([missing]) == 1
+    unknown = _write(tmp_path, "unknown",
+                     [_artifact(rows=[_spec_row(
+                         "a", {"name": "no_such_graph", "n": 4})])])
+    assert spec_check.main([unknown]) == 1
+    # non-canonical embedding (unresolved default k) flags too
+    non_canon = _write(tmp_path, "noncanon",
+                       [_artifact(rows=[_spec_row(
+                           "a", {"name": "d_equistatic", "n": 16})])])
+    assert spec_check.main([non_canon]) == 1
+    ok = _write(tmp_path, "ok2", [_artifact(rows=[_spec_row("a", good)])])
+    assert spec_check.main([ok]) == 0
+    assert spec_check.main([str(tmp_path / "nope")]) == 2
+
+
+def test_spec_check_exempts_topology_less_roofline_rows(tmp_path):
+    """roofline covers topology-less serving cells: missing specs are
+    legitimate there, but an embedded spec is still validated."""
+    no_spec = _write(tmp_path, "roof",
+                     [_artifact(suite="roofline",
+                                rows=[_row("roofline/a/decode_4k", 0.0,
+                                           tc=1.0)])])
+    assert spec_check.main([no_spec]) == 0
+    bad = _write(tmp_path, "roofbad",
+                 [_artifact(suite="roofline",
+                            rows=[_spec_row("roofline/a/train_4k",
+                                            {"name": "nope", "n": 4})])])
+    assert spec_check.main([bad]) == 1
+
+
+def test_validate_artifact_constrains_spec_shape():
+    art = _artifact(rows=[{"name": "x", "us_per_call": 1.0,
+                           "derived": {}, "spec": "base"}])
+    assert any("spec must be a dict" in p
+               for p in registry.validate_artifact(art))
 
 
 def test_recording_nested_removes_by_identity():

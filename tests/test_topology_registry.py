@@ -1,0 +1,199 @@
+"""Registry-driven conformance suite (ISSUE 3).
+
+Parametrized over *all* registered topologies: every round must be
+doubly stochastic, the schedule's max degree must satisfy the
+registered max-degree law, and measured finite-time convergence
+(paper Definition 2) must agree with the registered finite-time law —
+for every sampled (n, k, seed) configuration the registration declares
+valid.  A topology registered tomorrow is covered automatically.
+"""
+import numpy as np
+import pytest
+
+from repro.core.mixing import is_doubly_stochastic, is_finite_time_convergent
+from repro.topology import (TopologySpec, build_schedule, canonicalize,
+                            get_registration, register_topology,
+                            registered_names, unregister_topology)
+
+NS = (2, 3, 4, 5, 6, 8, 9, 12, 16, 25)
+KS = (1, 2, 4)
+
+
+def sample_specs(name, max_specs=12):
+    """Valid canonical sample specs for one registered topology, built
+    purely from its registered metadata."""
+    reg = get_registration(name)
+    ks = (KS + (None,)) if reg.takes_k and reg.default_k is not None \
+        else (KS if reg.takes_k else (None,))
+    out = []
+    for n in NS:
+        for k in ks:
+            try:
+                spec = canonicalize(TopologySpec(name=name, n=n, k=k))
+            except ValueError:
+                continue          # outside the registered valid-n/k set
+            if spec not in out:
+                out.append(spec)
+    assert out, f"no valid sample specs for {name!r}"
+    return out[:max_specs]
+
+
+@pytest.mark.parametrize("name", registered_names())
+def test_registered_topology_conformance(name):
+    reg = get_registration(name)
+    for spec in sample_specs(name):
+        sched = build_schedule(spec)
+        assert sched.n == spec.n
+        for W in sched.Ws:
+            assert is_doubly_stochastic(W), (spec, "doubly stochastic")
+        assert sched.max_degree <= reg.max_degree(spec), \
+            (spec, sched.max_degree, reg.max_degree(spec))
+        assert is_finite_time_convergent(sched) == reg.finite_time(spec), \
+            (spec, "finite-time law")
+        # the built schedule's attribute is derived from the same law
+        assert sched.finite_time == reg.finite_time(spec), (spec, "flag")
+
+
+@pytest.mark.parametrize("name", registered_names())
+def test_registered_metadata_is_well_formed(name):
+    reg = get_registration(name)
+    assert reg.description, f"{name}: registrations must carry a description"
+    spec = sample_specs(name, max_specs=1)[0]
+    assert isinstance(reg.finite_time(spec), bool)
+    assert isinstance(reg.max_degree(spec), int)
+    if reg.takes_k and reg.default_k is not None:
+        assert reg.default_k(16) >= 1
+
+
+def test_alias_resolves_to_same_registration():
+    assert get_registration("allreduce") is get_registration("complete")
+    assert "allreduce" in registered_names(include_aliases=True)
+    assert "allreduce" not in registered_names()
+
+
+def test_unknown_topology_rejected():
+    with pytest.raises(ValueError, match="unknown topology"):
+        get_registration("no_such_graph")
+    with pytest.raises(ValueError, match="unknown topology"):
+        build_schedule(TopologySpec("no_such_graph", 4))
+
+
+def test_new_topology_plugs_in_without_touching_consumers():
+    """@register_topology is the full extension surface: a topology
+    registered here immediately works through the spec pipeline, the
+    legacy shim, all three backend artifacts, and this conformance
+    suite's own sampling — no consumer edits."""
+    from repro.core.graphs import TopologySchedule, build_topology
+    from repro.sim.sweep import stack_schedules
+
+    def star_matrix(n):
+        # Metropolis-weighted star: hub 0, leaves 1..n-1
+        W = np.zeros((n, n))
+        w = 1.0 / n
+        for i in range(1, n):
+            W[0, i] = W[i, 0] = w
+        W[np.diag_indices(n)] = 1.0 - W.sum(axis=1)
+        return W
+
+    @register_topology(
+        "_test_star", finite_time=lambda s: s.n <= 2,
+        max_degree=lambda s: s.n - 1,
+        description="hub-and-spoke test topology")
+    def _build(spec):
+        return TopologySchedule(spec.name, spec.n,
+                                [star_matrix(spec.n)], None, False,
+                                spec.n - 1)
+
+    try:
+        assert "_test_star" in registered_names()
+        spec = canonicalize(TopologySpec("_test_star", 5))
+        sched = build_schedule(spec)
+        reg = get_registration("_test_star")
+        for s in sample_specs("_test_star"):
+            built = build_schedule(s)
+            assert is_doubly_stochastic(built.W(0))
+            assert built.max_degree <= reg.max_degree(s)
+            assert is_finite_time_convergent(built) == reg.finite_time(s)
+        # legacy shim picks it up
+        old_style = build_topology("_test_star", 5)
+        np.testing.assert_array_equal(old_style.W(0), sched.W(0))
+        # all three backend artifacts work
+        Ws, idx = sched.as_dense_stack(7)
+        assert Ws.shape == (1, 5, 5) and idx.shape == (7,)
+        plan = sched.as_ppermute_plan()
+        assert plan.n == 5 and len(plan) == 1
+        stacked, _ = stack_schedules([spec, TopologySpec("ring", 5)], 6)
+        assert stacked.shape == (2, 1, 5, 5)
+    finally:
+        unregister_topology("_test_star")
+    with pytest.raises(ValueError, match="unknown topology"):
+        get_registration("_test_star")
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_topology("ring", finite_time=False, max_degree=2)(
+            lambda spec: None)
+
+
+def test_failed_registration_leaves_no_trace():
+    """An alias collision must not leave a half-completed registration
+    behind (name or earlier aliases)."""
+    before = registered_names(include_aliases=True)
+    with pytest.raises(ValueError, match="already registered"):
+        register_topology("_test_dup", aliases=("_test_dup2", "allreduce"),
+                          finite_time=True, max_degree=1)(lambda spec: None)
+    assert registered_names(include_aliases=True) == before
+    for name in ("_test_dup", "_test_dup2"):
+        with pytest.raises(ValueError, match="unknown topology"):
+            get_registration(name)
+
+
+def test_reregistration_never_serves_stale_cached_builds():
+    """unregister_topology drops cached Schedules, so a later
+    registration under the same name builds fresh."""
+    from repro.core.graphs import TopologySchedule, complete_matrix
+
+    @register_topology("_test_tmp", finite_time=True,
+                       max_degree=lambda s: s.n - 1, description="v1")
+    def _v1(spec):
+        return TopologySchedule(spec.name, spec.n,
+                                [complete_matrix(spec.n)], None, True,
+                                spec.n - 1)
+
+    try:
+        first = build_schedule(TopologySpec("_test_tmp", 4))
+        np.testing.assert_allclose(first.W(0), np.full((4, 4), 0.25))
+    finally:
+        unregister_topology("_test_tmp")
+
+    @register_topology("_test_tmp", finite_time=lambda s: s.n == 1,
+                       max_degree=0, description="v2: identity mixing")
+    def _v2(spec):
+        return TopologySchedule(spec.name, spec.n, [np.eye(spec.n)],
+                                None, False, None)
+
+    try:
+        second = build_schedule(TopologySpec("_test_tmp", 4))
+        np.testing.assert_array_equal(second.W(0), np.eye(4))
+        assert second.finite_time is False
+    finally:
+        unregister_topology("_test_tmp")
+
+
+def test_built_finite_time_flag_derives_from_law():
+    """The registry law is the single source of truth for the built
+    schedule's finite_time attribute — including boundary configs the
+    old constructors hard-coded wrongly (ring n=3 is J/3)."""
+    assert build_schedule(TopologySpec("ring", 3)).finite_time is True
+    assert build_schedule(TopologySpec("ring", 9)).finite_time is False
+    assert build_schedule(TopologySpec("exp", 2)).finite_time is True
+    assert build_schedule(TopologySpec("exp", 25)).finite_time is False
+
+
+def test_seeded_topologies_cache_per_seed():
+    a = build_schedule(TopologySpec("d_equistatic", 25, 3, seed=0))
+    b = build_schedule(TopologySpec("d_equistatic", 25, 3, seed=1))
+    assert a is not b
+    assert not np.array_equal(a.W(0), b.W(0))
+    assert build_schedule(TopologySpec("d_equistatic", 25, 3, seed=1)) is b

@@ -1,0 +1,297 @@
+"""TopologySpec serialization/hashing + bit-exactness of the three
+backend artifacts against the pre-redesign code paths (ISSUE 3
+acceptance criteria).
+
+The "legacy" oracles below replicate, line for line, what the old
+string-dispatch ``build_topology`` and the per-consumer materializers
+(`sim.engine.materialize_schedule`, `sim.sweep.stack_schedules`,
+`dist` via ``compile_schedule``) computed before the registry existed.
+"""
+import json
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graphs import (TOPOLOGY_NAMES, TopologySchedule,
+                               _edge_schedule, base_graph, build_topology,
+                               complete_matrix, d_equistatic_matrix,
+                               exponential_matrix, hyper_hypercube,
+                               one_peer_equidyn_matrices,
+                               one_peer_exponential_matrices,
+                               one_peer_hypercube, ring_matrix,
+                               simple_base_graph, torus_matrix,
+                               u_equistatic_matrix)
+from repro.core.ppermute_plan import compile_schedule
+from repro.sim.sweep import stack_schedules
+from repro.topology import (Schedule, TopologySpec, as_schedule,
+                            build_schedule, canonicalize, spec_from_cli)
+
+
+def _legacy_build_topology(name, n, k=None):
+    """The pre-redesign string dispatch, verbatim."""
+    nodes = list(range(n))
+    if name == "base":
+        return _edge_schedule(name, n, base_graph(nodes, k), k)
+    if name == "simple_base":
+        return _edge_schedule(name, n, simple_base_graph(nodes, k), k)
+    if name == "hyper_hypercube":
+        return _edge_schedule(name, n, hyper_hypercube(nodes, k), k)
+    if name == "one_peer_hypercube":
+        return _edge_schedule(name, n, one_peer_hypercube(nodes), 1)
+    if name == "ring":
+        return TopologySchedule(name, n, [ring_matrix(n)], None, False, 2)
+    if name == "torus":
+        return TopologySchedule(name, n, [torus_matrix(n)], None, False, 4)
+    if name == "exp":
+        return TopologySchedule(name, n, [exponential_matrix(n)], None, False)
+    if name == "one_peer_exp":
+        ft = n & (n - 1) == 0
+        return TopologySchedule(name, n, one_peer_exponential_matrices(n),
+                                None, ft, 1)
+    if name in ("complete", "allreduce"):
+        return TopologySchedule(name, n, [complete_matrix(n)], None, True,
+                                n - 1)
+    if name == "d_equistatic":
+        deg = k or max(1, math.ceil(math.log2(n)))
+        return TopologySchedule(name, n, [d_equistatic_matrix(n, deg)],
+                                None, False, deg)
+    if name == "u_equistatic":
+        deg = k or max(2, 2 * math.ceil(math.log2(n) / 2))
+        return TopologySchedule(name, n, [u_equistatic_matrix(n, deg)],
+                                None, False, deg)
+    if name == "one_peer_equidyn":
+        return TopologySchedule(name, n, one_peer_equidyn_matrices(n),
+                                None, False, 1)
+    raise ValueError(f"unknown topology {name!r}")
+
+
+# (name, n, k) covering every entry of TOPOLOGY_NAMES, incl. the alias
+SHIM_CASES = [("base", 12, 1), ("base", 25, 2), ("simple_base", 22, 1),
+              ("hyper_hypercube", 12, 2), ("one_peer_hypercube", 16, None),
+              ("ring", 9, None), ("torus", 12, None), ("exp", 25, None),
+              ("one_peer_exp", 10, None), ("complete", 7, None),
+              ("allreduce", 7, None), ("d_equistatic", 25, None),
+              ("d_equistatic", 25, 3), ("u_equistatic", 25, None),
+              ("one_peer_equidyn", 25, None)]
+
+
+# ---------------------------------------------------------------------------
+# spec value-object behaviour
+# ---------------------------------------------------------------------------
+
+def test_spec_json_round_trip():
+    for name, n, k in SHIM_CASES:
+        spec = canonicalize(TopologySpec(name=name, n=n, k=k))
+        assert TopologySpec.from_json(spec.to_json()) == spec
+        assert TopologySpec.from_dict(spec.to_dict()) == spec
+        assert json.loads(spec.to_json())["name"] == name
+
+
+def test_spec_hash_and_equality():
+    a = TopologySpec("base", 25, 2)
+    b = TopologySpec("base", 25, 2)
+    assert a == b and hash(a) == hash(b)
+    assert a.spec_hash() == b.spec_hash()
+    c = TopologySpec("base", 25, 3)
+    assert a != c and a.spec_hash() != c.spec_hash()
+    # extras are order-insensitive and dict/pairs-insensitive
+    d1 = TopologySpec("one_peer_equidyn", 8, extra={"rounds": 4})
+    d2 = TopologySpec("one_peer_equidyn", 8, extra=(("rounds", 4),))
+    assert d1 == d2 and hash(d1) == hash(d2)
+
+
+def test_spec_hash_is_content_stable():
+    """spec_hash must be a pure function of the JSON form (artifact /
+    cache key — not Python's per-process salted hash)."""
+    spec = canonicalize(TopologySpec("base", 25, 2))
+    assert spec.spec_hash() == hashlib_ref(spec.to_json())
+
+
+def hashlib_ref(s):
+    import hashlib
+    return hashlib.sha256(s.encode()).hexdigest()[:16]
+
+
+def test_spec_label():
+    assert TopologySpec("base", 25, 2).label == "base-k2"
+    assert TopologySpec("ring", 25).label == "ring"
+
+
+def test_spec_rejects_bad_fields():
+    with pytest.raises(ValueError, match="positive int"):
+        TopologySpec("base", 0, 1)
+    with pytest.raises(ValueError, match="non-empty"):
+        TopologySpec("", 4)
+    with pytest.raises(ValueError, match="unknown spec keys"):
+        TopologySpec.from_dict({"name": "base", "n": 4, "degree": 2})
+    with pytest.raises(ValueError, match="'name' and 'n'"):
+        TopologySpec.from_dict({"name": "base"})
+
+
+def test_falsy_k_raises_not_defaults():
+    """The historical `k or default` dispatch silently treated k=0 as
+    "unset"; k=0 must now raise a clear ValueError everywhere."""
+    for name in ("d_equistatic", "u_equistatic", "base"):
+        with pytest.raises(ValueError, match="k must be >= 1"):
+            TopologySpec(name, 16, 0)
+        with pytest.raises(ValueError, match="k must be >= 1"):
+            build_topology(name, 16, 0)
+
+
+def test_default_k_rule_lives_in_registry():
+    """Omitted k resolves through registry metadata to the same degree
+    the legacy falsy-dispatch produced for k=None."""
+    for n in (4, 25, 64):
+        d = canonicalize(TopologySpec("d_equistatic", n))
+        assert d.k == max(1, math.ceil(math.log2(n)))
+        u = canonicalize(TopologySpec("u_equistatic", n))
+        assert u.k == max(2, 2 * math.ceil(math.log2(n) / 2))
+    with pytest.raises(ValueError, match="requires k"):
+        canonicalize(TopologySpec("base", 25))
+
+
+def test_canonicalize_drops_ignored_params():
+    ring = canonicalize(TopologySpec("ring", 9, k=3, seed=7))
+    assert ring.k is None and ring.seed == 0
+    with pytest.raises(ValueError, match="extra params"):
+        canonicalize(TopologySpec("ring", 9, extra={"rounds": 4}))
+
+
+def test_spec_from_cli():
+    s = spec_from_cli("base", n=25, k=2)
+    assert s == canonicalize(TopologySpec("base", 25, 2))
+    j = spec_from_cli('{"name": "base", "k": 2}', n=25)
+    assert j == s
+    with pytest.raises(ValueError, match="n="):
+        spec_from_cli('{"name": "base", "n": 9, "k": 2}', n=25)
+
+
+# ---------------------------------------------------------------------------
+# shim + construction bit-exactness vs the pre-redesign dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,n,k", SHIM_CASES)
+def test_shim_matches_legacy_dispatch_bit_exact(name, n, k):
+    new = build_topology(name, n, k)
+    old = _legacy_build_topology(name, n, k)
+    assert new.name == old.name and new.n == old.n and new.k == old.k
+    assert new.finite_time == old.finite_time
+    assert len(new.Ws) == len(old.Ws)
+    for Wn, Wo in zip(new.Ws, old.Ws):
+        np.testing.assert_array_equal(Wn, Wo)
+
+
+def test_shim_covers_every_registered_name():
+    assert {name for name, _, _ in SHIM_CASES} == set(TOPOLOGY_NAMES)
+
+
+# ---------------------------------------------------------------------------
+# backend artifacts: bit-exact vs the pre-redesign materializers
+# ---------------------------------------------------------------------------
+
+ARTIFACT_CASES = [("base", 25, 2), ("one_peer_exp", 10, None),
+                  ("ring", 9, None), ("d_equistatic", 16, None)]
+
+
+@pytest.mark.parametrize("name,n,k", ARTIFACT_CASES)
+def test_dense_stack_bit_exact(name, n, k):
+    steps = 13
+    sched = build_schedule(TopologySpec(name=name, n=n, k=k))
+    Ws, idx = sched.as_dense_stack(steps)
+    legacy = _legacy_build_topology(name, n, k)
+    L = max(1, len(legacy))
+    want = np.stack([np.asarray(legacy.W(r), np.float64)
+                     for r in range(L)]).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(Ws), want)
+    np.testing.assert_array_equal(np.asarray(idx),
+                                  np.arange(steps, dtype=np.int32) % L)
+
+
+@pytest.mark.parametrize("name,n,k", ARTIFACT_CASES)
+def test_ppermute_plan_bit_exact(name, n, k):
+    plan = build_schedule(
+        TopologySpec(name=name, n=n, k=k)).as_ppermute_plan()
+    want = compile_schedule(_legacy_build_topology(name, n, k))
+    assert plan.n == want.n and len(plan) == len(want)
+    for rp, rw in zip(plan.rounds, want.rounds):
+        np.testing.assert_array_equal(rp.self_weight, rw.self_weight)
+        assert len(rp.slots) == len(rw.slots)
+        for sp, sw in zip(rp.slots, rw.slots):
+            assert sp.perm == sw.perm
+            np.testing.assert_array_equal(sp.recv_weight, sw.recv_weight)
+
+
+def test_padded_sweep_stack_bit_exact():
+    """stack_schedules over specs == the pre-redesign pad-and-stack."""
+    steps = 11
+    specs = [TopologySpec("base", 8, 1), TopologySpec("ring", 8),
+             TopologySpec("one_peer_exp", 8)]
+    Ws, idx = stack_schedules(specs, steps)
+
+    legacy = [_legacy_build_topology(s.name, s.n, s.k) for s in specs]
+    per = []
+    for sched in legacy:                      # old materialize_schedule
+        L = max(1, len(sched))
+        W = jnp.asarray(np.stack([np.asarray(sched.W(r), np.float64)
+                                  for r in range(L)]).astype(np.float32))
+        per.append((W, jnp.asarray(np.arange(steps, dtype=np.int32) % L)))
+    Lmax = max(W.shape[0] for W, _ in per)
+    eye = jnp.eye(8, dtype=jnp.float32)
+    want_W = jnp.stack([
+        jnp.concatenate([W, jnp.broadcast_to(
+            eye, (Lmax - W.shape[0], 8, 8))]) if W.shape[0] < Lmax else W
+        for W, _ in per])
+    want_idx = jnp.stack([i for _, i in per])
+    np.testing.assert_array_equal(np.asarray(Ws), np.asarray(want_W))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(want_idx))
+
+
+# ---------------------------------------------------------------------------
+# memoization
+# ---------------------------------------------------------------------------
+
+def test_build_schedule_memoized_by_canonical_spec():
+    a = build_schedule(TopologySpec("base", 25, 2))
+    b = build_schedule(TopologySpec("base", 25, 2))
+    assert a is b
+    # non-canonical input (ignored seed) hits the same cache entry
+    c = build_schedule(TopologySpec("base", 25, 2, seed=5))
+    assert c is a
+    # the shim shares the same cached construction
+    assert build_topology("base", 25, 2) is a.as_topology_schedule()
+
+
+def test_artifacts_memoized_per_schedule():
+    s = build_schedule(TopologySpec("base", 25, 2))
+    W1, i1 = s.as_dense_stack(17)
+    W2, i2 = s.as_dense_stack(17)
+    assert W1 is W2 and i1 is i2
+    _, i3 = s.as_dense_stack(23)      # new steps -> new index only
+    assert i3 is not i1
+    assert s.as_ppermute_plan() is s.as_ppermute_plan()
+    P1, _ = s.as_padded(17, 9)
+    P2, _ = s.as_padded(17, 9)
+    assert P1 is P2
+
+
+def test_as_schedule_coercions():
+    spec = TopologySpec("ring", 9)
+    s = as_schedule(spec)
+    assert isinstance(s, Schedule) and s.spec == canonicalize(spec)
+    assert as_schedule(s) is s
+    legacy = _legacy_build_topology("ring", 9)
+    wrapped = as_schedule(legacy)
+    assert wrapped.spec is None
+    np.testing.assert_array_equal(wrapped.W(0), legacy.W(0))
+    with pytest.raises(TypeError, match="TopologySpec"):
+        as_schedule("ring")
+    with pytest.raises(TypeError, match="TopologySpec"):
+        build_schedule("ring")
+
+
+def test_padding_shorter_than_period_rejected():
+    s = build_schedule(TopologySpec("base", 8, 1))
+    with pytest.raises(ValueError, match="pad"):
+        s.as_padded(5, 1)
