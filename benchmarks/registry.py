@@ -42,10 +42,10 @@ SCHEMA_VERSION = 1
 
 # suite modules imported by load_all(); each registers itself on import
 SUITE_MODULES = ("consensus", "length", "comm_cost", "dsgd_hetero",
-                 "robust_methods", "precision", "roofline")
+                 "robust_methods", "precision", "roofline", "kernels")
 
 # the cheap, deterministic suites CI runs on every PR
-FAST_SUITES = ("consensus", "length", "comm_cost")
+FAST_SUITES = ("consensus", "length", "comm_cost", "kernels")
 
 
 @dataclass(frozen=True)

@@ -45,6 +45,13 @@ from .registry import load_artifacts, validate_artifact
 # against the floor instead of the (noise-level) baseline value
 METRIC_ABS_FLOOR = 1e-12
 
+# Suites whose timings are informational only (never compared): the
+# kernels suite times sub-ms host micro-ops whose wall clock is
+# allocator/scheduler-jitter dominated (observed >3x same-machine
+# variance even best-of-7) — its gated signal is the deterministic
+# stream-count model in the derived metrics, which stays fully gated.
+UNGATED_TIMING_SUITES = frozenset({"kernels"})
+
 # registry._sanitize serializes non-finite floats as strings, so both
 # the numeric and string encodings must be recognised
 _NONFINITE_STRINGS = {"nan", "-nan", "inf", "-inf", "+inf", "infinity",
@@ -87,6 +94,10 @@ def compare_suite(base: dict, new: dict, *, threshold: float,
     if base["ok"] and not new["ok"]:
         problems.append(f"{suite}: suite now FAILS (was ok in baseline)")
         return problems, notes
+    if suite in UNGATED_TIMING_SUITES:
+        ignore_timings = True
+        notes.append(f"{suite}: timings informational only (metric-gated "
+                     f"suite)")
 
     sb, sn = _timing_scale(base), _timing_scale(new)
     normalised = sb is not None and sn is not None

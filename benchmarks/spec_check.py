@@ -26,8 +26,10 @@ from .registry import load_artifacts
 # Suites whose rows are not all topology-attributable: roofline covers
 # the serving path too (prefill/decode dry-run cells have no gossip
 # topology), so a missing spec is legitimate there — any spec that IS
-# embedded (the train rows) is still fully validated.
-NON_TOPOLOGY_SUITES = frozenset({"roofline"})
+# embedded (the train rows) is still fully validated.  The kernels
+# suite measures per-round on-chip cost, parametrized by slot count
+# rather than by a topology.
+NON_TOPOLOGY_SUITES = frozenset({"roofline", "kernels"})
 
 
 def check_artifact(art: dict) -> list[str]:

@@ -17,6 +17,19 @@ The mixer runs under ``shard_map`` over the full mesh: leaves keep
 whatever tensor-parallel sharding their PartitionSpec gives them, and the
 permute moves shards along the gossip axis only — mixing is elementwise,
 so it commutes with any sharding of the non-node dims.
+
+On-chip, the per-round combine dispatches through
+``repro.kernels.ops.gossip_mix`` (DESIGN.md Sec. 9): the Pallas path
+feeds the S+1 slot buffers (own shard + each ppermute result) to one
+fused kernel — (S+2) HBM streams per leaf instead of the ~3S of the
+slot-by-slot accumulate, which stays as the shard-level reference (and
+the bit-exact default off-TPU).
+
+Only inexact (floating) leaves are gossip-averaged.  Integer / bool
+leaves (step counters, masks riding in method state trees) pass through
+unchanged: a weighted average is meaningless for them, and the
+historical float32 round-trip silently corrupted values outside f32's
+exact-integer range.
 """
 from __future__ import annotations
 
@@ -29,13 +42,16 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.ppermute_plan import RoundPlan, SchedulePlan
+from repro.kernels import ops
 
 
-def _round_body(rp: RoundPlan, axis: str, me):
+def _round_body(rp: RoundPlan, axis: str, me, kcfg: ops.KernelConfig):
     """Per-shard mixing for one round over a list of f32 work buffers."""
     w_self = jnp.asarray(rp.self_weight, jnp.float32)[me]
 
-    def body(bufs):
+    def body_ref(bufs):
+        # Reference accumulate — one self-scale plus one scaled add per
+        # slot; kept verbatim as the shard-level oracle.
         out = [w_self * b for b in bufs]
         for slot in rp.slots:
             w_recv = jnp.asarray(slot.recv_weight, jnp.float32)[me]
@@ -44,20 +60,36 @@ def _round_body(rp: RoundPlan, axis: str, me):
                 out[i] = out[i] + w_recv * recv
         return out
 
-    return body
+    def body_fused(bufs):
+        # Fused combine: all S+1 slot buffers stream through one
+        # ops.gossip_mix call per leaf.
+        w = jnp.stack(
+            [w_self] + [jnp.asarray(s.recv_weight, jnp.float32)[me]
+                        for s in rp.slots])
+        out = []
+        for b in bufs:
+            slots = [b] + [lax.ppermute(b, axis, perm=list(s.perm))
+                           for s in rp.slots]
+            out.append(ops.gossip_mix(slots, w, config=kcfg))
+        return out
+
+    return body_fused if kcfg.use_pallas else body_ref
 
 
 def make_gossip_mixer(mesh, plan: SchedulePlan, axis: str, specs, *,
-                      flatten: bool = False):
+                      flatten: bool = False,
+                      kernel_config: ops.KernelConfig | None = None):
     """Build ``mixer(tree, r) -> tree`` applying round ``r % len(plan)``.
 
     ``specs`` is a PartitionSpec pytree matching ``tree`` (the node-stack
     dim of every leaf must be sharded over ``axis``).  With
-    ``flatten=True`` all leaves are raveled into a single f32 buffer per
-    shard so each slot issues ONE ppermute for the whole tree instead of
-    one per leaf (fewer, larger messages — better for latency-bound
-    cross-pod links).
-    """
+    ``flatten=True`` all float leaves are raveled into a single f32
+    buffer per shard so each slot issues ONE ppermute for the whole tree
+    instead of one per leaf (fewer, larger messages — better for
+    latency-bound cross-pod links).  Non-float leaves are never mixed
+    (module docstring); ``kernel_config`` selects the combine backend
+    and is resolved once here, at build time."""
+    kcfg = ops.resolve_config(kernel_config)
     n_rounds = len(plan.rounds)
     axis_size = mesh.shape[axis]
     if axis_size != plan.n:
@@ -70,21 +102,27 @@ def make_gossip_mixer(mesh, plan: SchedulePlan, axis: str, specs, *,
     def shard_body(r, tree):
         me = lax.axis_index(axis)
         leaves, treedef = jax.tree.flatten(tree)
-        dtypes = [x.dtype for x in leaves]
-        shapes = [x.shape for x in leaves]
+        mixed = [jnp.issubdtype(x.dtype, jnp.inexact) for x in leaves]
+        flt = [x for x, m in zip(leaves, mixed) if m]
+        if not flt:   # nothing mixable: counters/masks pass through
+            return tree
+        dtypes = [x.dtype for x in flt]
+        shapes = [x.shape for x in flt]
         if flatten:
             work = [jnp.concatenate(
-                [x.astype(jnp.float32).reshape(-1) for x in leaves])]
+                [x.astype(jnp.float32).reshape(-1) for x in flt])]
         else:
-            work = [x.astype(jnp.float32) for x in leaves]
-        branches = [_round_body(rp, axis, me) for rp in plan.rounds]
+            work = [x.astype(jnp.float32) for x in flt]
+        branches = [_round_body(rp, axis, me, kcfg) for rp in plan.rounds]
         work = lax.switch(r % n_rounds, branches, work)
         if flatten:
             offsets = np.cumsum([0] + [int(np.prod(s)) for s in shapes])
             work = [work[0][offsets[i]:offsets[i + 1]].reshape(shapes[i])
-                    for i in range(len(leaves))]
+                    for i in range(len(flt))]
+        out = iter(w.astype(d) for w, d in zip(work, dtypes))
         return jax.tree.unflatten(
-            treedef, [w.astype(d) for w, d in zip(work, dtypes)])
+            treedef, [next(out) if m else x
+                      for x, m in zip(leaves, mixed)])
 
     mapped = shard_map(shard_body, mesh=mesh, in_specs=(P(), specs),
                        out_specs=specs, check_rep=False)

@@ -21,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.graphs import TopologySchedule
 from repro.core.ppermute_plan import SchedulePlan
+from repro.kernels import ops
 from repro.models import model as M
 from repro.optim.decentralized import make_method
 from repro.topology import Schedule, TopologySpec, as_schedule, spec_from_cli
@@ -68,6 +69,7 @@ class TrainStepBundle:
     plan: SchedulePlan
     param_shardings: Any
     spec: TopologySpec | None = None   # canonical topology spec
+    kernel_config: ops.KernelConfig | None = None
 
 
 def make_train_step(cfg, mesh, *,
@@ -77,7 +79,8 @@ def make_train_step(cfg, mesh, *,
                     param_dtype=jnp.bfloat16, remat: bool = True,
                     flatten_gossip: bool = False,
                     embed_lookup_replicated: bool = False,
-                    batch_shapes=None, momentum: float = 0.9
+                    batch_shapes=None, momentum: float = 0.9,
+                    kernel_config: ops.KernelConfig | None = None
                     ) -> TrainStepBundle:
     """One DSGD-family step: per-node grads -> method update -> gossip
     round ``step % n_rounds`` over the mesh's node axis.
@@ -85,7 +88,14 @@ def make_train_step(cfg, mesh, *,
     ``topology`` is a registered name (with ``k``), an inline JSON spec
     string, a ``TopologySpec`` (its ``n`` must match the mesh's node
     count) or a prebuilt ``Schedule``; the compiled ppermute plan comes
-    from the spec-memoized artifact cache."""
+    from the spec-memoized artifact cache.
+
+    ``kernel_config`` picks the fused-kernel backend for the method
+    update and the gossip combine.  ``None`` resolves the process-wide
+    default HERE, at factory time — the bundle's jitted step is built
+    against the resolved value (and records it), so later flips of the
+    default cannot silently retarget an already-built step."""
+    kcfg = ops.resolve_config(kernel_config)
     rules = make_rules(mesh, arch_name=cfg.name, context="train")
     n = rules.n_nodes
     if isinstance(topology, Schedule):
@@ -96,7 +106,7 @@ def make_train_step(cfg, mesh, *,
     else:
         sched = as_schedule(spec_from_cli(topology, n=n, k=k))
     plan = sched.as_ppermute_plan()
-    method = make_method(method_name, momentum)
+    method = make_method(method_name, momentum, kernel_config=kcfg)
 
     p_sds = node_stack_specs(M.param_specs(cfg, param_dtype), n)
     pspecs = param_partition_specs(p_sds, rules, node_axis=True)
@@ -125,7 +135,8 @@ def make_train_step(cfg, mesh, *,
             return tree
     else:
         mix_round = make_gossip_mixer(mesh, plan, rules.node_axis, pspecs,
-                                      flatten=flatten_gossip)
+                                      flatten=flatten_gossip,
+                                      kernel_config=kcfg)
 
     def loss_one(p, b):
         return M.loss_fn(cfg, p, b, remat=remat)[0]
@@ -156,7 +167,8 @@ def make_train_step(cfg, mesh, *,
     return TrainStepBundle(step_fn=step_fn, n_nodes=n, n_rounds=len(sched),
                            rules=rules,
                            schedule=sched.as_topology_schedule(), plan=plan,
-                           param_shardings=psh, spec=sched.spec)
+                           param_shardings=psh, spec=sched.spec,
+                           kernel_config=kcfg)
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas fused kernels + pure-jnp references for the repo's memory-bound
+hot loops (gossip combine, DSGD-momentum update, flash attention).
+
+``repro.kernels.ops`` is the only entry point consumers use: it
+dispatches per :class:`KernelConfig` (``pallas | ref | auto``) with the
+references as the semantic oracle (DESIGN.md Sec. 9)."""
+from .ops import (KernelConfig, default_kernel_config, flash_attention,
+                  fused_dsgd_step, gossip_mix, pallas_shape_ok,
+                  resolve_config, set_default_kernel_config)
+
+__all__ = [
+    "KernelConfig", "default_kernel_config", "set_default_kernel_config",
+    "resolve_config", "pallas_shape_ok",
+    "gossip_mix", "fused_dsgd_step", "flash_attention",
+]

@@ -11,6 +11,16 @@ Unfused this is 3 reads + 2 writes *per op* (momentum, axpy, scale) = 8+
 HBM streams; fused it is 3 reads + 2 writes total.  With ~1-16 GB of
 parameters per chip this update is strictly memory-bound, so the ~1.6x
 stream reduction is a direct wall-clock win.
+
+``pre_scale`` is an (R, 1) per-row operand (scalars are broadcast to it
+by the wrapper): the simulation engine folds the per-node gossip
+self-weight ``diag(W)`` through it with the node axis mapped onto rows.
+Its extra stream is R floats against R*C-sized tensors — noise.
+
+Ragged edges (R or C not a multiple of the block) are masked in-kernel
+the same way as ``gossip_mix``: partial tiles compute on the clamped
+block and zero the out-of-range lanes before the (dropped)
+out-of-bounds write, so every real parameter shape takes this path.
 """
 from __future__ import annotations
 
@@ -20,36 +30,47 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .gossip_mix import _edge_mask
 
-def _fused_dsgd_kernel(s_ref, x_ref, u_ref, g_ref, x_out, u_out):
-    beta, eta, pre = s_ref[0], s_ref[1], s_ref[2]
+
+def _fused_dsgd_kernel(s_ref, pre_ref, x_ref, u_ref, g_ref, x_out, u_out,
+                       *, n_rows, n_cols):
+    beta, eta = s_ref[0], s_ref[1]
     u_new = beta * u_ref[...].astype(jnp.float32) \
         + g_ref[...].astype(jnp.float32)
-    x_new = pre * (x_ref[...].astype(jnp.float32) - eta * u_new)
-    u_out[...] = u_new.astype(u_out.dtype)
-    x_out[...] = x_new.astype(x_out.dtype)
+    x_new = pre_ref[...] * (x_ref[...].astype(jnp.float32) - eta * u_new)
+    mask = _edge_mask(x_out.shape, pl.program_id(0), pl.program_id(1),
+                      n_rows, n_cols)
+    u_out[...] = jnp.where(mask, u_new, 0.0).astype(u_out.dtype)
+    x_out[...] = jnp.where(mask, x_new, 0.0).astype(x_out.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "block_c",
                                              "interpret"))
 def fused_dsgd_pallas(x: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
-                      beta: float, eta: float, pre_scale: float = 1.0,
+                      beta, eta, pre_scale=1.0,
                       *, block_r: int = 256, block_c: int = 512,
                       interpret: bool = False
                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """x, u, g: (R, C) -> (x', u')."""
+    """x, u, g: (R, C) -> (x', u').  ``pre_scale`` is a scalar or an
+    (R,)-vector applied per row."""
     R, C = x.shape
     block_r = min(block_r, R)
     block_c = min(block_c, C)
     grid = (pl.cdiv(R, block_r), pl.cdiv(C, block_c))
-    scalars = jnp.asarray([beta, eta, pre_scale], dtype=jnp.float32)
+    scalars = jnp.stack([jnp.asarray(beta, jnp.float32),
+                         jnp.asarray(eta, jnp.float32)])
+    pre = jnp.broadcast_to(
+        jnp.asarray(pre_scale, jnp.float32).reshape(-1, 1), (R, 1))
     spec = pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))
     return pl.pallas_call(
-        _fused_dsgd_kernel,
+        functools.partial(_fused_dsgd_kernel, n_rows=R, n_cols=C),
         grid=grid,
-        in_specs=[pl.BlockSpec((3,), lambda i, j: (0,)), spec, spec, spec],
+        in_specs=[pl.BlockSpec((2,), lambda i, j: (0,)),
+                  pl.BlockSpec((block_r, 1), lambda i, j: (i, 0)),
+                  spec, spec, spec],
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct((R, C), x.dtype),
                    jax.ShapeDtypeStruct((R, C), u.dtype)],
         interpret=interpret,
-    )(scalars, x, u, g)
+    )(scalars, pre, x, u, g)

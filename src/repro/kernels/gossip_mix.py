@@ -6,11 +6,24 @@ re-reads HBM S times; this kernel streams one (R, C) tile of every buffer
 through VMEM once and writes the combined tile, i.e. (S+1)+1 HBM streams
 total, the roofline minimum.
 
+Two entry points over the same kernel body:
+
+* :func:`gossip_mix_pallas` takes an already-stacked ``(S, R, C)``
+  buffer (simulation / benchmark callers that hold the stack anyway);
+* :func:`gossip_mix_slots_pallas` takes S separate ``(R, C)`` buffers —
+  the distributed gossip hot path feeds it its own shard plus each
+  ``ppermute`` result directly, so no stacked copy (an extra S reads +
+  S writes) is ever materialised.
+
 Tiling: blocks of (block_r, block_c) with block_c a multiple of 128 (lane
 width) and block_r a multiple of 8 (sublane) — float32 layout; the slot
 count S is small (<= k+1 <= 9 for every production topology) so the whole
 (S, block_r, block_c) stack fits comfortably in VMEM
-(e.g. 8 x 256 x 512 x 4B = 4 MiB).
+(e.g. 8 x 256 x 512 x 4B = 4 MiB).  Ragged edges (R or C not an exact
+multiple of the block) are handled by masking the partial tile in-kernel:
+out-of-range lanes are forced to 0 before the (dropped) out-of-bounds
+write, so arbitrary real-model shapes — odd vocab rows, non-128 widths —
+run on the Pallas path instead of silently falling back to the reference.
 """
 from __future__ import annotations
 
@@ -21,13 +34,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _gossip_mix_kernel(w_ref, bufs_ref, out_ref):
+def _edge_mask(block_shape, i, j, n_rows, n_cols):
+    """Validity mask for the (i, j) tile of an (n_rows, n_cols) array —
+    all-True except on ragged edge tiles."""
+    br, bc = block_shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0) + i * br
+    cols = jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1) + j * bc
+    return (rows < n_rows) & (cols < n_cols)
+
+
+def _combine(w_ref, bufs, out_ref, n_rows, n_cols):
+    """Shared kernel body: bufs is a list of (block_r, block_c) reads."""
+    acc = w_ref[0] * bufs[0].astype(jnp.float32)
+    for i in range(1, len(bufs)):  # S is static and tiny -> unrolled
+        acc += w_ref[i] * bufs[i].astype(jnp.float32)
+    mask = _edge_mask(out_ref.shape, pl.program_id(0), pl.program_id(1),
+                      n_rows, n_cols)
+    out_ref[...] = jnp.where(mask, acc, 0.0).astype(out_ref.dtype)
+
+
+def _gossip_mix_kernel(w_ref, bufs_ref, out_ref, *, n_rows, n_cols):
     # bufs_ref: (S, block_r, block_c) in VMEM; w_ref: (S,) in VMEM/SMEM.
-    s = bufs_ref.shape[0]
-    acc = w_ref[0] * bufs_ref[0].astype(jnp.float32)
-    for i in range(1, s):  # S is static and tiny -> unrolled
-        acc += w_ref[i] * bufs_ref[i].astype(jnp.float32)
-    out_ref[...] = acc.astype(out_ref.dtype)
+    _combine(w_ref, [bufs_ref[i] for i in range(bufs_ref.shape[0])],
+             out_ref, n_rows, n_cols)
+
+
+def _gossip_mix_slots_kernel(w_ref, *refs, n_rows, n_cols):
+    *buf_refs, out_ref = refs
+    _combine(w_ref, [b[...] for b in buf_refs], out_ref, n_rows, n_cols)
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "block_c",
@@ -41,7 +75,7 @@ def gossip_mix_pallas(bufs: jnp.ndarray, weights: jnp.ndarray,
     block_c = min(block_c, C)
     grid = (pl.cdiv(R, block_r), pl.cdiv(C, block_c))
     return pl.pallas_call(
-        _gossip_mix_kernel,
+        functools.partial(_gossip_mix_kernel, n_rows=R, n_cols=C),
         grid=grid,
         in_specs=[
             pl.BlockSpec((S,), lambda i, j: (0,)),
@@ -51,3 +85,28 @@ def gossip_mix_pallas(bufs: jnp.ndarray, weights: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((R, C), bufs.dtype),
         interpret=interpret,
     )(weights.astype(jnp.float32), bufs)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c",
+                                             "interpret"))
+def gossip_mix_slots_pallas(bufs, weights: jnp.ndarray,
+                            *, block_r: int = 256, block_c: int = 512,
+                            interpret: bool = False) -> jnp.ndarray:
+    """bufs: tuple of S (R, C) buffers; weights: (S,) -> (R, C) sum.
+    Stack-free variant for callers whose slots live in separate arrays
+    (the ppermute gossip); reads each slot exactly once."""
+    bufs = tuple(bufs)
+    R, C = bufs[0].shape
+    block_r = min(block_r, R)
+    block_c = min(block_c, C)
+    grid = (pl.cdiv(R, block_r), pl.cdiv(C, block_c))
+    spec = pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))
+    return pl.pallas_call(
+        functools.partial(_gossip_mix_slots_kernel, n_rows=R, n_cols=C),
+        grid=grid,
+        in_specs=[pl.BlockSpec((len(bufs),), lambda i, j: (0,))]
+        + [spec] * len(bufs),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((R, C), bufs[0].dtype),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), *bufs)

@@ -1,12 +1,32 @@
-"""Public kernel entry points with backend dispatch.
+"""Public kernel entry points with explicit backend dispatch.
 
-On TPU the Pallas kernels run natively; on CPU (this container, the
-simulation engine, and the dry-run lowering) the pure-jnp references are
-used so that every jit/lower path works on any backend.  Set
-``repro.kernels.ops.FORCE_PALLAS_INTERPRET = True`` to route through the
-Pallas kernels in interpret mode (tests do this explicitly instead).
+Dispatch is governed by a :class:`KernelConfig` value — there is no
+mutable module flag read at trace time.  Factories that pin compiled
+executables (``repro.optim.decentralized.make_method``,
+``repro.sim.engine.compiled_scan_run``, ``repro.dist.steps``) resolve
+their config ONCE at construction and carry it in their cache keys, so
+flipping the process-wide default between two runs produces a fresh
+trace with the new backend instead of silently reusing the stale one
+(see DESIGN.md Sec. 9).
+
+Backends:
+
+* ``auto`` (default) — Pallas on TPU, pure-jnp references everywhere
+  else (this container, the simulation engine, the dry-run lowering).
+* ``pallas`` — force the Pallas kernels; off-TPU they run in interpret
+  mode (the CI ``kernels`` lane and the parity tests use this).
+* ``ref`` — force the references.
+
+Shape support is centralised in :func:`pallas_shape_ok` — the single
+guard every entry point consults.  ``gossip_mix`` and
+``fused_dsgd_step`` mask their ragged edge tiles in-kernel, so ANY
+non-empty shape dispatches to Pallas (odd vocab rows, non-128 widths
+included); ``flash_attention`` still requires exact (128, 128) tile
+multiples.
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -14,43 +34,187 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .fused_dsgd import fused_dsgd_pallas
-from .gossip_mix import gossip_mix_pallas
+from .gossip_mix import gossip_mix_pallas, gossip_mix_slots_pallas
 
-FORCE_PALLAS_INTERPRET = False
-
-
-def _use_pallas() -> bool:
-    return jax.default_backend() == "tpu" or FORCE_PALLAS_INTERPRET
+_BACKENDS = ("auto", "pallas", "ref")
 
 
-def _interp() -> bool:
-    return jax.default_backend() != "tpu"
+@dataclass(frozen=True)
+class KernelConfig:
+    """Hashable dispatch policy, threaded through every factory that
+    pins a compiled executable (it must be part of their cache keys).
+
+    ``backend``: ``auto`` | ``pallas`` | ``ref``.
+    ``interpret``: force Pallas interpret mode even on TPU (tests)."""
+    backend: str = "auto"
+    interpret: bool = False
+
+    def __post_init__(self):
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, got "
+                             f"{self.backend!r}")
+
+    @property
+    def use_pallas(self) -> bool:
+        if self.backend == "auto":
+            return jax.default_backend() == "tpu"
+        return self.backend == "pallas"
+
+    @property
+    def run_interpret(self) -> bool:
+        """Pallas kernels can only run natively on TPU; anywhere else
+        the forced-pallas path goes through interpret mode."""
+        return self.interpret or jax.default_backend() != "tpu"
 
 
-def gossip_mix(bufs: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
-    """(S, R, C), (S,) -> (R, C) fused weighted combine."""
-    if _use_pallas() and bufs.ndim == 3 and bufs.shape[1] % 8 == 0 \
-            and bufs.shape[2] % 128 == 0:
-        return gossip_mix_pallas(bufs, weights, interpret=_interp())
+_DEFAULT_CONFIG = KernelConfig()
+
+
+def default_kernel_config() -> KernelConfig:
+    return _DEFAULT_CONFIG
+
+
+def set_default_kernel_config(config: KernelConfig) -> KernelConfig:
+    """Install a new process-wide default; returns the previous one.
+    Only affects factories/calls made AFTER this — anything built
+    earlier keeps the config it resolved at construction time."""
+    global _DEFAULT_CONFIG
+    if not isinstance(config, KernelConfig):
+        raise TypeError(f"expected KernelConfig, got {type(config)}")
+    prev = _DEFAULT_CONFIG
+    _DEFAULT_CONFIG = config
+    return prev
+
+
+def resolve_config(config: KernelConfig | None) -> KernelConfig:
+    """``None`` -> the current process-wide default, resolved EAGERLY
+    (callers bake the returned value into closures and cache keys)."""
+    return _DEFAULT_CONFIG if config is None else config
+
+
+def pallas_shape_ok(kind: str, shape: tuple[int, ...]) -> bool:
+    """Single source of truth for which operand shapes dispatch to the
+    Pallas kernels (``tests/test_kernel_dispatch.py`` pins this table).
+
+    * ``gossip_mix``: a stacked ``(S, ...)`` buffer or one slot buffer
+      of any rank — ragged tiles are masked in-kernel, so every
+      non-empty shape is supported.
+    * ``fused_dsgd``: any non-empty shape (leaves are 2-D-normalised
+      by :func:`fused_dsgd_step`; ragged tiles are masked in-kernel).
+    * ``flash_attention``: ``(Tq, Tk, D)`` — all three must be exact
+      multiples of 128 (no masked tiles in that kernel yet).
+    """
+    if any(d == 0 for d in shape):
+        return False
+    if kind in ("gossip_mix", "fused_dsgd"):
+        return len(shape) >= 1
+    if kind == "flash_attention":
+        return len(shape) == 3 and all(d % 128 == 0 for d in shape)
+    raise ValueError(f"unknown kernel kind {kind!r}")
+
+
+def _as_2d(a: jnp.ndarray, *, lead_rows: bool = False):
+    """Normalise an arbitrary-rank leaf to the (R, C) layout the fused
+    kernels tile.  ``lead_rows=True`` keeps axis 0 as the row axis (so a
+    per-leading-axis scale vector maps onto rows); otherwise the last
+    axis becomes lanes and everything before it folds into rows."""
+    if a.ndim == 2 and not lead_rows:
+        return a, a.shape
+    shape = a.shape
+    if a.ndim == 0:
+        return a.reshape(1, 1), shape
+    if lead_rows:   # before the 1-D case: an (n,) leaf maps to (n, 1)
+        return a.reshape(shape[0], -1), shape
+    if a.ndim == 1:
+        return a.reshape(1, -1), shape
+    return a.reshape(-1, shape[-1]), shape
+
+
+# ---------------------------------------------------------------------------
+# gossip combine
+# ---------------------------------------------------------------------------
+
+def gossip_mix(bufs, weights, *, config: KernelConfig | None = None
+               ) -> jnp.ndarray:
+    """Fused weighted combine ``sum_s weights[s] * bufs[s]``.
+
+    ``bufs`` is either a stacked ``(S, ...)`` array or a sequence of S
+    equal-shape buffers.  The distributed gossip hot path passes the
+    slot *list* (own buffer + each ``ppermute`` result): the variadic
+    kernel reads every slot exactly once and writes the combined
+    output — ``S + 1`` HBM streams, with no stacked ``(S, ...)`` copy
+    materialised first.  Output has the slot shape and dtype.
+    """
+    cfg = resolve_config(config)
+    if isinstance(bufs, (list, tuple)):
+        slots = list(bufs)
+        if not slots:
+            raise ValueError("gossip_mix needs at least one buffer")
+        w = jnp.stack([jnp.asarray(x, jnp.float32) for x in weights]) \
+            if isinstance(weights, (list, tuple)) else weights
+        if cfg.use_pallas and pallas_shape_ok("gossip_mix",
+                                              slots[0].shape):
+            two_d = [_as_2d(b) for b in slots]
+            out = gossip_mix_slots_pallas(
+                tuple(b for b, _ in two_d), w,
+                interpret=cfg.run_interpret)
+            return out.reshape(two_d[0][1])
+        return ref.gossip_mix_ref(jnp.stack(slots), w)
+    if cfg.use_pallas and bufs.ndim >= 2 \
+            and pallas_shape_ok("gossip_mix", bufs.shape):
+        s = bufs.shape[0]
+        if bufs.ndim == 2:
+            b3 = bufs.reshape(s, 1, -1)
+        elif bufs.ndim == 3:
+            b3 = bufs
+        else:
+            b3 = bufs.reshape(s, -1, bufs.shape[-1])
+        out = gossip_mix_pallas(b3, weights, interpret=cfg.run_interpret)
+        return out.reshape(bufs.shape[1:])
     return ref.gossip_mix_ref(bufs, weights)
 
 
-def fused_dsgd_step(x, u, g, beta: float, eta: float, pre_scale: float = 1.0):
-    if _use_pallas() and x.ndim == 2 and x.shape[0] % 8 == 0 \
-            and x.shape[1] % 128 == 0:
-        return fused_dsgd_pallas(x, u, g, beta, eta, pre_scale,
-                                 interpret=_interp())
+# ---------------------------------------------------------------------------
+# fused DSGD(-momentum) update
+# ---------------------------------------------------------------------------
+
+def fused_dsgd_step(x, u, g, beta, eta, pre_scale=1.0, *,
+                    config: KernelConfig | None = None):
+    """``u' = beta*u + g;  x' = pre_scale * (x - eta*u')`` in one pass
+    (3 reads + 2 writes instead of the 8 streams of the unfused
+    momentum/axpy/scale chain).
+
+    Accepts leaves of any rank.  ``pre_scale`` is a scalar, or a vector
+    over the leaf's leading axis (the simulation engine folds the
+    per-node gossip self-weight ``diag(W)`` through it — see
+    ``repro.optim.decentralized.DSGD``)."""
+    cfg = resolve_config(config)
+    per_row = hasattr(pre_scale, "ndim") and pre_scale.ndim >= 1
+    if cfg.use_pallas and pallas_shape_ok("fused_dsgd", x.shape):
+        x2, shape = _as_2d(x, lead_rows=per_row)
+        u2, _ = _as_2d(u, lead_rows=per_row)
+        g2, _ = _as_2d(g, lead_rows=per_row)
+        x_new, u_new = fused_dsgd_pallas(x2, u2, g2, beta, eta, pre_scale,
+                                         interpret=cfg.run_interpret)
+        return x_new.reshape(shape), u_new.reshape(shape)
+    if per_row:
+        pre_scale = pre_scale.reshape((-1,) + (1,) * (x.ndim - 1))
     return ref.fused_dsgd_ref(x, u, g, beta, eta, pre_scale)
 
 
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
-                    softcap=None, scale=None):
+                    softcap=None, scale=None,
+                    config: KernelConfig | None = None):
     """(B, H, Tq, D) x (B, H, Tk, D)^2 -> (B, H, Tq, D)."""
-    Tq, Tk = q.shape[2], k.shape[2]
-    if _use_pallas() and Tq % 128 == 0 and Tk % 128 == 0 \
-            and q.shape[3] % 128 == 0:
+    cfg = resolve_config(config)
+    if cfg.use_pallas and pallas_shape_ok(
+            "flash_attention", (q.shape[2], k.shape[2], q.shape[3])):
         return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                       softcap=softcap, scale=scale,
-                                      interpret=_interp())
+                                      interpret=cfg.run_interpret)
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                    softcap=softcap, scale=scale)

@@ -13,12 +13,13 @@ import jax.numpy as jnp
 def gossip_mix_ref(bufs: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     """Weighted combine of self + received neighbour buffers.
 
-    bufs:    (S, R, C) — slot 0 is the node's own parameters, slots 1..S-1
+    bufs:    (S, ...) — slot 0 is the node's own parameters, slots 1..S-1
              are buffers received via collective-permute.
-    weights: (S,)      — w_self followed by receive weights.
-    returns  (R, C)    — sum_s weights[s] * bufs[s].
+    weights: (S,)     — w_self followed by receive weights.
+    returns  (...,)   — sum_s weights[s] * bufs[s].
     """
-    w = weights.astype(jnp.float32).reshape(-1, 1, 1)
+    w = jnp.asarray(weights, jnp.float32).reshape(
+        (-1,) + (1,) * (bufs.ndim - 1))
     return jnp.sum(w * bufs.astype(jnp.float32), axis=0).astype(bufs.dtype)
 
 
@@ -30,8 +31,13 @@ def fused_dsgd_ref(x: jnp.ndarray, u: jnp.ndarray, g: jnp.ndarray,
 
         u' = beta * u + g
         x' = pre_scale * (x - eta * u')
+
+    ``pre_scale`` is a scalar or any array broadcastable against ``x``
+    (per-node self-weights arrive shaped ``(n, 1, ..., 1)``).
     """
     xf, uf, gf = (a.astype(jnp.float32) for a in (x, u, g))
+    if hasattr(pre_scale, "astype"):
+        pre_scale = pre_scale.astype(jnp.float32)
     u_new = beta * uf + gf
     x_new = pre_scale * (xf - eta * u_new)
     return x_new.astype(x.dtype), u_new.astype(u.dtype)

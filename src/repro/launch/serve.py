@@ -43,18 +43,20 @@ def main() -> None:
                          ("data", "model"))
     dtype = jnp.float32 if args.reduced else jnp.bfloat16
 
-    key = jax.random.PRNGKey(0)
-    params = M.init(cfg, key, dtype)
+    # Independent streams for init / prompts / frontend stubs — reusing
+    # one key would correlate the prompt tokens with the weight init.
+    k_init, k_prompt, k_front = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = M.init(cfg, k_init, dtype)
     B = args.batch
     S = args.prompt_len + args.gen
     npfx = 0
-    batch = {"tokens": jax.random.randint(key, (B, args.prompt_len), 0,
+    batch = {"tokens": jax.random.randint(k_prompt, (B, args.prompt_len), 0,
                                           cfg.vocab_size)}
     if cfg.frontend == "audio":
-        batch["frames"] = stub_audio_frontend(key, B, cfg.d_model, dtype,
+        batch["frames"] = stub_audio_frontend(k_front, B, cfg.d_model, dtype,
                                               frames=16)
     elif cfg.frontend == "vision":
-        batch["prefix_embeds"] = stub_vision_frontend(key, B, cfg.d_model,
+        batch["prefix_embeds"] = stub_vision_frontend(k_front, B, cfg.d_model,
                                                       dtype, patches=16)
         npfx = 16
     S += npfx

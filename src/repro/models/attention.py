@@ -2,9 +2,11 @@
 
 The core ``sdpa`` uses a memory-bounded pure-jnp streaming softmax (scan
 over query chunks) so that lowering on any backend never materialises the
-full (T, S) logits for long sequences; on TPU the Pallas flash kernel in
-``repro.kernels`` replaces it via ``ops.flash_attention`` dispatch when
-shapes align.  Decode (Tq == 1) takes a direct einsum path that keeps the
+full (T, S) logits for long sequences; the Pallas flash kernel behind
+``repro.kernels.ops.flash_attention`` is validated against the same math
+but is NOT wired into this path yet — it lacks the GQA-grouped layout
+and masked ragged tiles this layer needs (DESIGN.md Sec. 9 tracks the
+gap).  Decode (Tq == 1) takes a direct einsum path that keeps the
 reduction over the (possibly sequence-sharded) cache axis — GSPMD turns
 that into partial max/sum + small all-reduces (LSE-combine), which is how
 ``long_500k`` serves with the KV cache sharded across the data axis.

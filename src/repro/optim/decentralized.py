@@ -35,6 +35,9 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+from repro.kernels.ops import KernelConfig
+
 
 def mix(W: jnp.ndarray, tree):
     """x_i' = sum_j W[i, j] x_j applied to every leaf's leading node axis."""
@@ -49,6 +52,11 @@ class Method:
     name: str
     init: Callable
     step: Callable  # (params_n, grads_n, state, mixer|W, eta) -> (params_n, state)
+    # The kernel dispatch policy this method's step was built against.
+    # It rides along so every executable cache keyed on the Method
+    # (sim.engine.compiled_scan_run, sim.sweep.compiled_sweep_run, the
+    # dist.steps jits) is keyed on the backend too.
+    kernel_config: KernelConfig | None = None
 
 
 def _as_mixer(w_or_fn) -> Callable:
@@ -65,13 +73,37 @@ def _zeros_like(tree):
 
 # ---------------------------------------------------------------------------
 # DSGD (+momentum): x^{r+1} = W (x^r - eta * u^r)     [paper Eq. (1)]
+#
+# Two step bodies over the same math, selected ONCE at construction by
+# the resolved KernelConfig:
+#
+# * the tree-map body — the bit-exact oracle; the default off-TPU path,
+#   unchanged from the original implementation;
+# * the fused body — every leaf update is one ops.fused_dsgd_step call
+#   (momentum + axpy + scale in a single HBM pass).  With a dense
+#   mixing matrix the per-node gossip self-weight d = diag(W) is folded
+#   into the kernel's pre_scale and the mix runs with the
+#   diag-normalised W~[i, j] = W[i, j] / d_j (columns with d_j = 0 are
+#   left untouched), so  W~ @ (d * half) == W @ half  exactly — the
+#   self-weight multiply costs no extra pass.  With a transport mixer
+#   (repro.dist.gossip) the self-weight is already fused inside the
+#   gossip combine, so pre_scale stays 1.
+#
+# Plain DSGD (momentum == 0) always uses the tree-map body: its update
+# is the single axpy x - eta*g — 3 HBM streams that XLA fuses on its
+# own — while the momentum kernel would read g twice and write a dead
+# u' buffer (5 streams).  The fused path only wins when there IS a
+# momentum buffer to fuse.
 # ---------------------------------------------------------------------------
 
-def DSGD(momentum: float = 0.0) -> Method:
+def DSGD(momentum: float = 0.0,
+         kernel_config: KernelConfig | None = None) -> Method:
+    cfg = ops.resolve_config(kernel_config)
+
     def init(params_n):
         return {"u": _zeros_like(params_n)} if momentum else {}
 
-    def step(params_n, grads_n, state, W, eta):
+    def step_ref(params_n, grads_n, state, W, eta):
         mixer = _as_mixer(W)
         if momentum:
             u = jax.tree.map(lambda u, g: momentum * u + g, state["u"],
@@ -81,7 +113,27 @@ def DSGD(momentum: float = 0.0) -> Method:
         half = jax.tree.map(lambda x, g: x - eta * g, params_n, grads_n)
         return mixer(half), state
 
-    return Method("dsgd" + (f"m{momentum}" if momentum else ""), init, step)
+    def step_fused(params_n, grads_n, state, W, eta):
+        if callable(W):
+            pre, mixer = 1.0, W
+        else:
+            d = jnp.diagonal(W.astype(jnp.float32))
+            safe = d != 0.0
+            pre = jnp.where(safe, d, 1.0)
+            mixer = _as_mixer(W * jnp.where(safe, 1.0 / pre, 1.0)[None, :])
+        leaves_x, tdef = jax.tree.flatten(params_n)
+        pairs = [ops.fused_dsgd_step(x, u, g, momentum, eta, pre,
+                                     config=cfg)
+                 for x, u, g in zip(leaves_x,
+                                    jax.tree.leaves(state["u"]),
+                                    jax.tree.leaves(grads_n))]
+        half = jax.tree.unflatten(tdef, [p[0] for p in pairs])
+        u = jax.tree.unflatten(tdef, [p[1] for p in pairs])
+        return mixer(half), {"u": u}
+
+    step = step_fused if momentum and cfg.use_pallas else step_ref
+    return Method("dsgd" + (f"m{momentum}" if momentum else ""), init,
+                  step, kernel_config=cfg)
 
 
 # ---------------------------------------------------------------------------
@@ -171,21 +223,31 @@ def GradientTracking() -> Method:
 METHOD_NAMES = ("dsgd", "dsgdm", "qg-dsgdm", "d2", "gt")
 
 
-@lru_cache(maxsize=None)
-def make_method(name: str, momentum: float = 0.9) -> Method:
+def make_method(name: str, momentum: float = 0.9,
+                kernel_config: KernelConfig | None = None) -> Method:
     """Build (and memoize) a method.  Methods are stateless frozen
     closures, so returning the same object for the same arguments lets
     ``jax.jit`` caches keyed on the method (the scan engine, the sweep
     layer, repro.dist step factories) hit across calls instead of
-    recompiling identical programs."""
-    return _make_method(name, momentum)
+    recompiling identical programs.
+
+    ``kernel_config`` selects the fused-kernel backend for the methods
+    that use one (DSGD/DSGD-momentum).  ``None`` resolves the
+    process-wide default HERE — before the memo lookup — so the cache
+    is keyed on the concrete config: flipping the default between two
+    runs yields a different Method (hence fresh jit entries downstream)
+    instead of silently reusing executables traced for the old
+    backend."""
+    return _make_method(name, momentum, ops.resolve_config(kernel_config))
 
 
-def _make_method(name: str, momentum: float) -> Method:
+@lru_cache(maxsize=None)
+def _make_method(name: str, momentum: float,
+                 kernel_config: KernelConfig) -> Method:
     if name == "dsgd":
-        return DSGD(0.0)
+        return DSGD(0.0, kernel_config)
     if name == "dsgdm":
-        return DSGD(momentum)
+        return DSGD(momentum, kernel_config)
     if name == "qg-dsgdm":
         return QGDSGDm(momentum)
     if name == "d2":

@@ -162,16 +162,21 @@ def _scan_run(params_n, Ws, idx, mask, batches_st, *,
 
 
 @lru_cache(maxsize=8)
-def compiled_scan_run(loss_fn, method: Method, eta: float, eval_fn):
+def compiled_scan_run(loss_fn, method: Method, eta: float, eval_fn,
+                      kernel_config=None):
     """Memoized jitted runner: jax.jit's dispatch cache is keyed on the
     wrapped callable's identity, so building a fresh partial+jit per
     call would recompile identical programs.  Keyed on the closure
     identities (NOT e.g. ``eval_fn is None`` — distinct eval closures
     capture distinct test sets and must not share a runner); pair with
     the memoized ``make_method`` so repeated runs of one setup share an
-    executable.  Entries pin their captured data + executable, hence
-    the small maxsize: fresh per-call closures simply rotate through
-    without benefit."""
+    executable.  ``kernel_config`` (the method's resolved
+    ``KernelConfig``) sits in the key so an executable traced for one
+    kernel backend can never be served for another — the method's
+    trace depends on it (see DESIGN.md Sec. 9).  Entries pin their
+    captured data + executable, hence the small maxsize: fresh per-call
+    closures simply rotate through without benefit."""
+    del kernel_config  # cache key only; the method's step already baked it in
     return jax.jit(partial(_scan_run, loss_fn=loss_fn, method=method,
                            eta=eta, eval_fn=eval_fn), donate_argnums=(0,))
 
@@ -206,7 +211,8 @@ def simulate_decentralized(
     Ws, idx = materialize_schedule(schedule, steps)
     mask_np = eval_mask(steps, eval_every)
     batches_st = stack_batches(batches, steps)
-    run = compiled_scan_run(loss_fn, method, eta, eval_fn)
+    run = compiled_scan_run(loss_fn, method, eta, eval_fn,
+                            method.kernel_config)
     with donation_fallback_ok():
         losses, accs, cons = run(params_n, Ws, idx, jnp.asarray(mask_np),
                                  batches_st)

@@ -75,10 +75,12 @@ def stack_schedules(
 
 
 @lru_cache(maxsize=8)
-def compiled_sweep_run(loss_fn, method: Method, eta: float, eval_fn):
+def compiled_sweep_run(loss_fn, method: Method, eta: float, eval_fn,
+                       kernel_config=None):
     """Memoized jitted configs x seeds runner (see
     ``engine.compiled_scan_run`` for why the jit wrapper itself must be
-    cached)."""
+    cached and why ``kernel_config`` sits in the key)."""
+    del kernel_config  # cache key only; the method's step already baked it in
     run1 = partial(_scan_run, loss_fn=loss_fn, method=method, eta=eta,
                    eval_fn=eval_fn)
     over_seeds = jax.vmap(run1, in_axes=(0, None, None, None, None))
@@ -117,7 +119,8 @@ def sweep_decentralized(
     mask_np = eval_mask(steps, eval_every)
     batches_st = stack_batches(batches, steps)
 
-    run = compiled_sweep_run(loss_fn, method, eta, eval_fn)
+    run = compiled_sweep_run(loss_fn, method, eta, eval_fn,
+                             method.kernel_config)
     with engine.donation_fallback_ok():
         losses, accs, cons = run(P, Ws, idx, jnp.asarray(mask_np),
                                  batches_st)

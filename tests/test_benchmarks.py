@@ -149,6 +149,26 @@ def test_report_flags_aggregate_timing_regression(tmp_path):
     assert report.main([b, n2, "--threshold", "0.2"]) == 0
 
 
+def test_report_timing_exempt_suite_still_metric_gated(tmp_path):
+    """The kernels suite's host timings are jitter-dominated and never
+    gate (UNGATED_TIMING_SUITES), but its stream-count metrics still
+    do."""
+    assert "kernels" in report.UNGATED_TIMING_SUITES
+    b = _write(tmp_path, "base",
+               [_artifact(suite="kernels",
+                          rows=[_row("g/fused", 1000.0, streams=4)])])
+    # 50x slower: would trip the aggregate gate for any normal suite
+    n = _write(tmp_path, "new",
+               [_artifact(suite="kernels",
+                          rows=[_row("g/fused", 50000.0, streams=4)])])
+    assert report.main([b, n, "--threshold", "0.2"]) == 0
+    # ...but a drifted stream count is a hard failure
+    n2 = _write(tmp_path, "new2",
+                [_artifact(suite="kernels",
+                           rows=[_row("g/fused", 1000.0, streams=9)])])
+    assert report.main([b, n2, "--threshold", "0.2"]) == 1
+
+
 def test_report_flags_metric_drift_and_missing(tmp_path):
     b = _write(tmp_path, "base",
                [_artifact(rows=[_row("a", 1000.0, acc=0.95, tag="ok")])])

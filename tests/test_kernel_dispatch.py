@@ -1,0 +1,261 @@
+"""KernelConfig dispatch: the shared shape guard, backend selection,
+cache-key freshness on backend flips, and live fused-kernel call sites
+in the optim/sim hot paths (the dist hot path's live-site test runs in
+tests/test_dist.py, which owns the multi-device subprocess harness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graphs import build_topology
+from repro.kernels import ops
+from repro.kernels.ops import (KernelConfig, pallas_shape_ok,
+                               set_default_kernel_config)
+from repro.optim.decentralized import make_method
+from repro.sim.engine import simulate_decentralized
+
+KEY = jax.random.PRNGKey(0)
+PALLAS = KernelConfig(backend="pallas", interpret=True)
+REF = KernelConfig(backend="ref")
+
+
+@pytest.fixture
+def counters(monkeypatch):
+    """Count trace-time entries into each Pallas kernel wrapper."""
+    counts = {"gossip": 0, "gossip_slots": 0, "dsgd": 0}
+    real = (ops.gossip_mix_pallas, ops.gossip_mix_slots_pallas,
+            ops.fused_dsgd_pallas)
+
+    def wrap(name, fn):
+        def inner(*a, **k):
+            counts[name] += 1
+            return fn(*a, **k)
+        return inner
+
+    monkeypatch.setattr(ops, "gossip_mix_pallas", wrap("gossip", real[0]))
+    monkeypatch.setattr(ops, "gossip_mix_slots_pallas",
+                        wrap("gossip_slots", real[1]))
+    monkeypatch.setattr(ops, "fused_dsgd_pallas", wrap("dsgd", real[2]))
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# the shared shape guard
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,shape,want", [
+    # masked ragged tiles: every non-empty shape runs on Pallas
+    ("gossip_mix", (3, 8, 128), True),
+    ("gossip_mix", (3, 7, 65), True),
+    ("gossip_mix", (9, 300, 129), True),
+    ("gossip_mix", (2, 0, 128), False),      # empty -> ref
+    ("fused_dsgd", (8, 128), True),
+    ("fused_dsgd", (7, 65), True),
+    ("fused_dsgd", (5,), True),              # rank-normalised by ops
+    ("fused_dsgd", (4, 3, 33), True),
+    ("fused_dsgd", (0, 128), False),
+    # flash attention has no masked tiles yet: exact 128-multiples only
+    ("flash_attention", (128, 128, 128), True),
+    ("flash_attention", (256, 128, 128), True),
+    ("flash_attention", (100, 128, 128), False),
+    ("flash_attention", (128, 130, 128), False),
+    ("flash_attention", (128, 128, 64), False),
+])
+def test_shape_guard_pins_dispatch(kind, shape, want):
+    assert pallas_shape_ok(kind, shape) is want
+
+
+def test_shape_guard_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        pallas_shape_ok("nope", (8, 128))
+
+
+def test_guard_agrees_with_kernel_grids(counters):
+    """Any shape the guard routes to Pallas must actually run there and
+    match the reference — the guard and the kernels' own pl.cdiv grids
+    can never disagree again (the old hand-copied %8/%128 guards did)."""
+    for shape in [(2, 8, 128), (3, 7, 65), (4, 13, 200), (2, 300, 129)]:
+        assert pallas_shape_ok("gossip_mix", shape)
+        bufs = jax.random.normal(KEY, shape)
+        w = jnp.full((shape[0],), 1.0 / shape[0])
+        got = ops.gossip_mix(bufs, w, config=PALLAS)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ops.gossip_mix(bufs, w, config=REF)),
+            atol=1e-6, rtol=1e-6)
+    assert counters["gossip"] == 4
+
+
+def test_kernel_config_validates_backend():
+    with pytest.raises(ValueError):
+        KernelConfig(backend="tpu")
+
+
+# ---------------------------------------------------------------------------
+# dispatch follows the config
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_follows_config(counters):
+    bufs = jax.random.normal(KEY, (3, 16, 96))
+    w = jnp.asarray([0.5, 0.25, 0.25])
+    ops.gossip_mix(bufs, w, config=REF)
+    x, u, g = (jax.random.normal(jax.random.fold_in(KEY, i), (10, 30))
+               for i in range(3))
+    ops.fused_dsgd_step(x, u, g, 0.9, 0.05, config=REF)
+    assert counters == {"gossip": 0, "gossip_slots": 0, "dsgd": 0}
+    ops.gossip_mix(bufs, w, config=PALLAS)
+    ops.gossip_mix([bufs[0], bufs[1]], [w[0], w[1]], config=PALLAS)
+    ops.fused_dsgd_step(x, u, g, 0.9, 0.05, config=PALLAS)
+    assert counters == {"gossip": 1, "gossip_slots": 1, "dsgd": 1}
+
+
+def test_optim_hot_path_has_live_pallas_call_site(counters):
+    """DSGD-momentum leaf updates really route through
+    ops.fused_dsgd_step (not just importable): forcing the Pallas
+    backend reaches the kernel, and the result matches the tree-map
+    oracle.  The tree includes a 1-D (n,) leaf so the per-node
+    pre_scale fold covers scalar-per-node parameters too.  Plain DSGD
+    (momentum == 0) intentionally stays on the tree-map body — its
+    update is a bare 3-stream axpy; the 5-stream momentum kernel would
+    be a pessimization there."""
+    n = 5
+    params_n = {"w": jax.random.normal(KEY, (n, 7, 33)),
+                "b": jax.random.normal(jax.random.fold_in(KEY, 1), (n, 33)),
+                "t": jax.random.normal(jax.random.fold_in(KEY, 2), (n,))}
+    grads = jax.tree.map(lambda x: 0.1 * x, params_n)
+    W = jnp.asarray(build_topology("base", n, 2).W(0))
+
+    m_pal = make_method("dsgdm", kernel_config=PALLAS)
+    m_ref = make_method("dsgdm", kernel_config=REF)
+    p_pal, s_pal = m_pal.step(params_n, grads, m_pal.init(params_n), W, 0.05)
+    assert counters["dsgd"] > 0
+    p_ref, s_ref = m_ref.step(params_n, grads, m_ref.init(params_n), W, 0.05)
+    for a, b in zip(jax.tree.leaves((p_pal, s_pal)),
+                    jax.tree.leaves((p_ref, s_ref))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+    before = counters["dsgd"]
+    m0 = make_method("dsgd", kernel_config=PALLAS)
+    p0, _ = m0.step(params_n, grads, m0.init(params_n), W, 0.05)
+    assert counters["dsgd"] == before, \
+        "plain DSGD must keep the 3-stream tree-map body"
+    m0_ref = make_method("dsgd", kernel_config=REF)
+    p0_ref, _ = m0_ref.step(params_n, grads, m0_ref.init(params_n), W, 0.05)
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p0_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fold_handles_zero_self_weight():
+    """A round whose W has zeros on the diagonal (pure exchange) must
+    not blow up the diag-folded fused path."""
+    W = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])
+    params_n = {"w": jax.random.normal(KEY, (2, 9, 17))}
+    grads = jax.tree.map(lambda x: 0.1 * x, params_n)
+    m_pal = make_method("dsgdm", kernel_config=PALLAS)
+    m_ref = make_method("dsgdm", kernel_config=REF)
+    p_pal, _ = m_pal.step(params_n, grads, m_pal.init(params_n), W, 0.05)
+    p_ref, _ = m_ref.step(params_n, grads, m_ref.init(params_n), W, 0.05)
+    np.testing.assert_allclose(np.asarray(p_pal["w"]),
+                               np.asarray(p_ref["w"]), atol=1e-5, rtol=1e-5)
+
+
+def test_default_cpu_path_is_bit_exact_with_treemap_oracle():
+    """On a non-TPU backend the default (auto) config must reproduce the
+    historical tree-map math bit-for-bit."""
+    assert jax.default_backend() != "tpu", "test assumes a CPU/GPU host"
+    n, momentum, eta = 4, 0.9, 0.05
+    params_n = {"w": jax.random.normal(KEY, (n, 6, 10))}
+    grads = jax.tree.map(lambda x: 0.3 * x, params_n)
+    W = jnp.asarray(build_topology("base", n, 1).W(0))
+    method = make_method("dsgdm", momentum)
+    state = method.init(params_n)
+    got, new_state = method.step(params_n, grads, state, W, eta)
+    u = jax.tree.map(lambda u, g: momentum * u + g, state["u"], grads)
+    half = jax.tree.map(lambda x, uu: x - eta * uu, params_n, u)
+    Wt = W.astype(jnp.float32)
+    want = jax.tree.map(
+        lambda x: jnp.tensordot(Wt, x.astype(jnp.float32),
+                                axes=([1], [0])).astype(x.dtype), half)
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(want["w"]))
+    np.testing.assert_array_equal(np.asarray(new_state["u"]["w"]),
+                                  np.asarray(u["w"]))
+
+
+# ---------------------------------------------------------------------------
+# backend flips invalidate the executable caches
+# ---------------------------------------------------------------------------
+
+def _quad_loss(p, b):
+    return jnp.mean((p["w"] - b) ** 2)
+
+
+def _run_sim(steps=3, n=4):
+    params = {"w": jnp.ones((3, 5))}
+    sched = build_topology("base", n, 1)
+
+    def batches(r):
+        return jax.random.normal(jax.random.fold_in(KEY, r), (n, 3, 5))
+
+    return simulate_decentralized(
+        loss_fn=_quad_loss, params=params, method=make_method("dsgdm"),
+        schedule=sched, batches=batches, steps=steps, eta=0.05)
+
+
+def test_backend_flip_changes_dispatch_between_runs(counters):
+    """Regression for the stale-executable bug: with the old module
+    global, flipping the backend after the first run silently kept the
+    previously traced backend because make_method/compiled_scan_run
+    cache entries were keyed only on closures.  Resolving the default
+    config INSIDE make_method (before its memo lookup) keys every
+    downstream cache on the concrete backend."""
+    prev = set_default_kernel_config(REF)
+    try:
+        res_ref = _run_sim()
+        assert counters["dsgd"] == 0, "ref run must not touch Pallas"
+        set_default_kernel_config(PALLAS)
+        res_pal = _run_sim()
+        assert counters["dsgd"] > 0, \
+            "flipping the default backend must re-trace onto Pallas"
+        np.testing.assert_allclose(res_ref.losses, res_pal.losses,
+                                   atol=1e-5, rtol=1e-5)
+    finally:
+        set_default_kernel_config(prev)
+
+
+def test_make_method_memo_is_config_keyed():
+    prev = set_default_kernel_config(REF)
+    try:
+        m_ref = make_method("dsgdm")
+        assert make_method("dsgdm") is m_ref
+        set_default_kernel_config(PALLAS)
+        m_pal = make_method("dsgdm")
+        assert m_pal is not m_ref
+        assert m_pal.kernel_config == PALLAS
+        assert m_ref.kernel_config == REF
+        # flipping back returns the original memoized method
+        set_default_kernel_config(REF)
+        assert make_method("dsgdm") is m_ref
+    finally:
+        set_default_kernel_config(prev)
+
+
+def test_sim_engine_pallas_forced_matches_ref_backend(counters):
+    """Whole-run parity: the scan engine under the forced Pallas path
+    reproduces the ref-backend losses (interpret-mode conformance at
+    the system level, not just per-kernel)."""
+    params = {"w": jnp.ones((3, 5))}
+    sched = build_topology("base", 4, 1)
+
+    def batches(r):
+        return jax.random.normal(jax.random.fold_in(KEY, r), (4, 3, 5))
+
+    kw = dict(loss_fn=_quad_loss, params=params, schedule=sched,
+              batches=batches, steps=4, eta=0.05)
+    res_ref = simulate_decentralized(
+        method=make_method("dsgdm", kernel_config=REF), **kw)
+    res_pal = simulate_decentralized(
+        method=make_method("dsgdm", kernel_config=PALLAS), **kw)
+    assert counters["dsgd"] > 0
+    np.testing.assert_allclose(res_ref.losses, res_pal.losses, atol=1e-5,
+                               rtol=1e-5)

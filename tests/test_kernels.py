@@ -1,6 +1,4 @@
 """Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp ref."""
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,9 +7,14 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fused_dsgd import fused_dsgd_pallas
-from repro.kernels.gossip_mix import gossip_mix_pallas
+from repro.kernels.gossip_mix import gossip_mix_pallas, gossip_mix_slots_pallas
 
 KEY = jax.random.PRNGKey(0)
+
+# Ragged shapes: nothing here is a multiple of the (8, 128) f32 tile —
+# odd vocab-ish rows, non-128 widths, rows below one sublane.  The
+# masked edge tiles must make these exact, not just "supported".
+RAGGED_RC = [(7, 65), (13, 200), (300, 129), (5, 640), (257, 384)]
 
 
 def _rand(key, shape, dtype):
@@ -22,6 +25,7 @@ def _rand(key, shape, dtype):
 @pytest.mark.parametrize("S,R,C", [
     (2, 8, 128), (3, 16, 256), (5, 256, 512), (9, 24, 128),
     (2, 300, 640),  # non-multiple R exercises block clamping via grid
+    (3, 7, 65), (4, 13, 200), (2, 300, 129),  # fully ragged (masked tiles)
 ])
 def test_gossip_mix_matches_ref(S, R, C, dtype):
     k1, k2 = jax.random.split(KEY)
@@ -37,7 +41,24 @@ def test_gossip_mix_matches_ref(S, R, C, dtype):
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("R,C", [(8, 128), (64, 256), (257, 384)])
+@pytest.mark.parametrize("S", [1, 3, 9])
+@pytest.mark.parametrize("R,C", [(8, 128), (7, 65), (300, 129)])
+def test_gossip_mix_slots_matches_ref(S, R, C, dtype):
+    """Stack-free variant (the dist gossip hot path) == stacked ref."""
+    ks = jax.random.split(KEY, S + 1)
+    bufs = tuple(_rand(k, (R, C), dtype) for k in ks[:-1])
+    w = jax.random.uniform(ks[-1], (S,), dtype=jnp.float32)
+    got = gossip_mix_slots_pallas(bufs, w, interpret=True,
+                                  block_r=128, block_c=128)
+    want = ref.gossip_mix_ref(jnp.stack(bufs), w)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("R,C", [(8, 128), (64, 256)] + RAGGED_RC)
 def test_fused_dsgd_matches_ref(R, C, dtype):
     ks = jax.random.split(KEY, 3)
     x, u, g = (_rand(k, (R, C), dtype) for k in ks)
@@ -50,6 +71,22 @@ def test_fused_dsgd_matches_ref(R, C, dtype):
                                np.asarray(wx, np.float32), atol=tol, rtol=tol)
     np.testing.assert_allclose(np.asarray(gu, np.float32),
                                np.asarray(wu, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("R,C", [(8, 128), (7, 65)])
+def test_fused_dsgd_per_row_pre_scale(R, C):
+    """Vector pre_scale (the folded per-node gossip self-weight) applies
+    row-wise, including rows scaled by 0."""
+    ks = jax.random.split(KEY, 4)
+    x, u, g = (_rand(k, (R, C), jnp.float32) for k in ks[:3])
+    pre = jax.random.uniform(ks[3], (R,), dtype=jnp.float32).at[0].set(0.0)
+    gx, gu = fused_dsgd_pallas(x, u, g, 0.9, 0.01, pre, interpret=True,
+                               block_r=64, block_c=128)
+    wx, wu = ref.fused_dsgd_ref(x, u, g, 0.9, 0.01, pre[:, None])
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(wx), atol=1e-6,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gu), np.asarray(wu), atol=1e-6,
+                               rtol=1e-6)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
