@@ -42,10 +42,11 @@ SCHEMA_VERSION = 1
 
 # suite modules imported by load_all(); each registers itself on import
 SUITE_MODULES = ("consensus", "length", "comm_cost", "dsgd_hetero",
-                 "robust_methods", "precision", "roofline", "kernels")
+                 "robust_methods", "precision", "roofline", "kernels",
+                 "serving")
 
 # the cheap, deterministic suites CI runs on every PR
-FAST_SUITES = ("consensus", "length", "comm_cost", "kernels")
+FAST_SUITES = ("consensus", "length", "comm_cost", "kernels", "serving")
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,127 @@
+"""Serving suite: decode-phase dispatch counts, scan-vs-loop parity,
+tokens/s.
+
+The quantity that predicts serving latency at small batch is not FLOPs
+but per-token *dispatch* overhead: the historical serving path paid one
+XLA executable call plus one device->host sync (the argmax) per
+generated token, while the compiled engine (`repro.serve.make_engine`)
+issues exactly ONE executable call for the whole decode phase and keeps
+every sampling decision on device.  This suite pins that dispatch-count
+model with MEASURED counts (deterministic integers, gated by report.py
+against the committed baseline), asserts greedy token parity between
+the scan engine and the per-token loop, and records tokens/s for both
+paths (host timings — informational only, listed in
+``UNGATED_TIMING_SUITES`` like the kernels suite).
+
+Dispatch model for generating N tokens from a prefilled prompt:
+
+* per-token loop: ``N - 1`` decode executable calls, plus ``N`` host
+  round-trips for the argmax/token handling;
+* compiled scan engine: ``1`` executable call, ``0`` per-token host
+  syncs (one transfer at the end for the finished token block).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.dist.steps import make_decode_step, make_prefill
+from repro.models import model as M
+from repro.serve import make_engine
+
+from .common import emit
+from .registry import register
+
+B, P, N = 2, 8, 8       # batch, prompt length, generated tokens
+
+
+def dispatch_model(n: int) -> dict[str, dict[str, int]]:
+    return {"loop": {"executable_calls": n - 1, "host_syncs": n},
+            "scan": {"executable_calls": 1, "host_syncs": 0}}
+
+
+def _best_s(fn, iters: int = 5) -> float:
+    fn()  # warmup (compile)
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+@register("serving", fast=True)
+def run() -> dict:
+    cfg = get_config("gemma3-1b").reduced()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                          cfg.vocab_size)}
+
+    engine = make_engine(cfg, mesh, batch=B, prompt_len=P, max_new=N,
+                         param_dtype=jnp.float32, cache_dtype=jnp.float32)
+    pre = make_prefill(cfg, mesh, batch=B, seq=P + N,
+                       param_dtype=jnp.float32, cache_dtype=jnp.float32)
+    dec = make_decode_step(cfg, mesh, batch=B, seq=P + N,
+                           param_dtype=jnp.float32, cache_dtype=jnp.float32)
+
+    # --- measured dispatch counts + token parity ----------------------
+    before = engine.dispatch_counter[0]
+    scan_tokens, _ = engine.generate(params, batch)
+    scan_calls = engine.dispatch_counter[0] - before
+
+    loop_calls = 0
+    logits, cache, _ = pre.fn(params, batch)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    for i in range(N - 1):
+        logits, cache = dec.fn(params, cache, tok, jnp.int32(P + i))
+        loop_calls += 1
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+    loop_tokens = jnp.concatenate(outs, axis=1)
+
+    model = dispatch_model(N)
+    assert scan_calls == model["scan"]["executable_calls"] == 1
+    assert loop_calls == model["loop"]["executable_calls"]
+    parity = int(np.array_equal(np.asarray(scan_tokens),
+                                np.asarray(loop_tokens)))
+    assert parity == 1, "scan-decode tokens diverged from the loop"
+
+    emit(f"serving/dispatch/N{N}/loop", 0.0,
+         f"executable_calls={loop_calls};"
+         f"host_syncs={model['loop']['host_syncs']}")
+    emit(f"serving/dispatch/N{N}/scan", 0.0,
+         f"executable_calls={scan_calls};host_syncs=0;"
+         f"calls_saved={loop_calls - scan_calls}")
+    emit(f"serving/parity/N{N}", 0.0, f"tokens_equal={parity}")
+
+    # --- tokens/s (informational; timings ungated for this suite) ----
+    def run_scan():
+        t, _ = engine.generate(params, batch)
+        jax.block_until_ready(t)
+
+    def run_loop():
+        logits, cache, _ = pre.fn(params, batch)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        for i in range(N - 1):
+            logits, cache = dec.fn(params, cache, tok, jnp.int32(P + i))
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
+
+    s_scan = _best_s(run_scan)
+    s_loop = _best_s(run_loop)
+    # derived carries only deterministic counts; the wall time lives in
+    # us_per_call, which report.py never gates for this suite
+    emit(f"serving/generate/N{N}/scan", s_scan * 1e6, f"tokens={B * N}")
+    emit(f"serving/generate/N{N}/loop", s_loop * 1e6, f"tokens={B * N}")
+
+    return {"dispatch_model": model,
+            "measured": {"scan_calls": scan_calls, "loop_calls": loop_calls},
+            "greedy_parity": bool(parity),
+            "tokens_per_s": {"scan": B * N / s_scan, "loop": B * N / s_loop},
+            "shape": {"batch": B, "prompt": P, "gen": N}}

@@ -28,8 +28,9 @@ from .registry import load_artifacts
 # topology), so a missing spec is legitimate there — any spec that IS
 # embedded (the train rows) is still fully validated.  The kernels
 # suite measures per-round on-chip cost, parametrized by slot count
-# rather than by a topology.
-NON_TOPOLOGY_SUITES = frozenset({"roofline", "kernels"})
+# rather than by a topology; the serving suite measures the decode
+# engine, which has no gossip at all.
+NON_TOPOLOGY_SUITES = frozenset({"roofline", "kernels", "serving"})
 
 
 def check_artifact(art: dict) -> list[str]:

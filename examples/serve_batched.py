@@ -1,6 +1,11 @@
-"""Batched serving example: prefill + greedy decode with a sharded KV
-cache on a (data, model) mesh, using a reduced gemma3 (sliding-window +
-global attention, MQA) model.
+"""Batched serving example: prefill + compiled scan generation with a
+sharded KV cache on a (data, model) mesh, using a reduced gemma3
+(sliding-window + global attention, MQA) model.
+
+The whole decode phase — token loop, cache appends, sampling — is one
+compiled executable (``repro.serve.make_engine``); compare the reported
+steady-state time against the per-token dispatch loop the serving
+benchmark (`benchmarks/serving.py`) keeps as the reference.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -15,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.dist.steps import make_decode_step, make_prefill
 from repro.models import model as M
+from repro.serve import SamplingParams, make_engine
 
 
 def main():
@@ -25,32 +30,29 @@ def main():
     params = M.init(cfg, jax.random.PRNGKey(0), jnp.float32)
 
     B, prompt, gen = 8, 24, 12
-    S = prompt + gen
     batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
                                           (B, prompt), 0, cfg.vocab_size)}
 
-    pre = make_prefill(cfg, mesh, batch=B, seq=S, param_dtype=jnp.float32,
-                       cache_dtype=jnp.float32)
-    t0 = time.time()
-    logits, cache, _ = pre.fn(batch)(params, batch)
-    print(f"prefill batch={B} len={prompt}: {time.time() - t0:.2f}s")
-
-    dec = make_decode_step(cfg, mesh, batch=B, seq=S,
-                           param_dtype=jnp.float32,
-                           cache_dtype=jnp.float32)
-    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    seqs = [tok]
-    t0 = time.time()
-    for i in range(gen - 1):
-        logits, cache = dec.fn(params, cache, tok, jnp.int32(prompt + i))
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        seqs.append(tok)
-    dt = time.time() - t0
-    out = jnp.concatenate(seqs, axis=1)
-    print(f"decoded {gen} tokens x {B} seqs in {dt:.2f}s "
-          f"({dt / (gen - 1) * 1e3:.0f} ms/step)")
-    for r in range(min(4, B)):
-        print("  seq", r, list(map(int, out[r])))
+    for sampling in (SamplingParams(),  # greedy
+                     SamplingParams(mode="sample", temperature=0.8,
+                                    top_k=40)):
+        engine = make_engine(cfg, mesh, batch=B, prompt_len=prompt,
+                             max_new=gen, sampling=sampling,
+                             param_dtype=jnp.float32,
+                             cache_dtype=jnp.float32)
+        t0 = time.time()
+        out, _ = engine.generate(params, batch, key=jax.random.PRNGKey(2))
+        jax.block_until_ready(out)
+        t_first = time.time() - t0
+        t0 = time.time()
+        out, _ = engine.generate(params, batch, key=jax.random.PRNGKey(2))
+        jax.block_until_ready(out)
+        dt = time.time() - t0
+        print(f"[{sampling.mode}] {gen} tokens x {B} seqs: "
+              f"first call {t_first:.2f}s (compile), steady {dt:.3f}s "
+              f"({B * gen / dt:.0f} tok/s)")
+        for r in range(min(4, B)):
+            print("  seq", r, list(map(int, out[r])))
     print("OK")
 
 

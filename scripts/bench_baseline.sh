@@ -8,11 +8,11 @@
 #
 #     bash scripts/bench_baseline.sh [suites]
 #
-# Default suites are the fast CI lane (consensus,length,comm_cost,kernels).
+# Default suites are the fast CI lane (consensus,length,comm_cost,kernels,serving).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-SUITES="${1:-consensus,length,comm_cost,kernels}"
+SUITES="${1:-consensus,length,comm_cost,kernels,serving}"
 STEPS=300
 OUT=benchmarks/baselines
 

@@ -13,7 +13,7 @@ reduction order — ``tests/test_dist.py`` is the oracle.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -139,7 +139,7 @@ def make_train_step(cfg, mesh, *,
                                       kernel_config=kcfg)
 
     def loss_one(p, b):
-        return M.loss_fn(cfg, p, b, remat=remat)[0]
+        return M.loss_fn(cfg, p, b, remat=remat, kernel_config=kcfg)[0]
 
     embed_repl = NamedSharding(mesh, P(rules.node_axis))
 
@@ -177,9 +177,10 @@ def make_train_step(cfg, mesh, *,
 
 @dataclass(frozen=True)
 class PrefillBundle:
-    fn: Callable                  # fn(batch) -> jitted (params, batch)
+    fn: Any                       # jitted (params, batch)
     rules: ShardingRules
     seq: int
+    kernel_config: ops.KernelConfig | None = None
 
 
 @dataclass(frozen=True)
@@ -187,12 +188,17 @@ class DecodeBundle:
     fn: Any                       # jitted (params, cache, tokens, index[, enc])
     rules: ShardingRules
     seq: int
+    decode_mode: str = "dus"
+    kernel_config: ops.KernelConfig | None = None
 
 
 def make_prefill(cfg, mesh, *, batch: int, seq: int,
-                 param_dtype=jnp.bfloat16,
-                 cache_dtype=jnp.bfloat16) -> PrefillBundle:
-    """Prompt -> (last-position logits, filled KV cache, enc_out|None)."""
+                 param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                 kernel_config: ops.KernelConfig | None = None
+                 ) -> PrefillBundle:
+    """Prompt -> (last-position logits, filled KV cache, enc_out|None).
+    ``bundle.fn`` IS the jitted ``(params, batch)`` callable."""
+    kcfg = ops.resolve_config(kernel_config)
     rules = make_rules(mesh, arch_name=cfg.name, context="serve")
     psh = _shardings(mesh,
                      param_partition_specs(M.param_specs(cfg, param_dtype),
@@ -205,24 +211,27 @@ def make_prefill(cfg, mesh, *, batch: int, seq: int,
     # different layout would be rejected by pjit, not resharded).
     csh = _shardings(mesh, cache_partition_specs(cache_sds, rules))
 
-    jitted = jax.jit(
-        lambda params, b: M.prefill(cfg, params, b, seq, cache_dtype),
+    fn = jax.jit(
+        lambda params, b: M.prefill(cfg, params, b, seq, cache_dtype,
+                                    kernel_config=kcfg),
         in_shardings=(psh, bsh), out_shardings=(bsh, csh, bsh))
-
-    def fn(batch_like):
-        # batch structure (frontend keys) only selects the jit cache entry
-        del batch_like
-        return jitted
-
-    return PrefillBundle(fn=fn, rules=rules, seq=seq)
+    return PrefillBundle(fn=fn, rules=rules, seq=seq, kernel_config=kcfg)
 
 
 def make_decode_step(cfg, mesh, *, batch: int, seq: int,
                      param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
-                     append_free: bool = False) -> DecodeBundle:
-    """One-token decode step against a sharded KV cache."""
-    from repro.models import attention as A
-
+                     append_free: bool = False,
+                     kernel_config: ops.KernelConfig | None = None
+                     ) -> DecodeBundle:
+    """One-token decode step against a sharded KV cache.  The cache
+    policy is the explicit ``decode_mode`` argument of
+    ``model.decode_step`` — baked into this bundle's trace, so two
+    bundles with different modes coexist without poisoning each other's
+    jit caches (the historical module-global flag was save/restored
+    around the trace here, which worked only as long as nobody traced
+    concurrently)."""
+    kcfg = ops.resolve_config(kernel_config)
+    mode = "append_free" if append_free else "dus"
     rules = make_rules(mesh, arch_name=cfg.name, context="serve")
     psh = _shardings(mesh,
                      param_partition_specs(M.param_specs(cfg, param_dtype),
@@ -234,15 +243,9 @@ def make_decode_step(cfg, mesh, *, batch: int, seq: int,
     scalar = NamedSharding(mesh, P())
 
     def run(params, caches, tokens, index, enc_out=None):
-        # The append-free flag is read by the attention layer at trace
-        # time; scope it to this trace.
-        prev = A.APPEND_FREE_DECODE
-        A.APPEND_FREE_DECODE = append_free
-        try:
-            return M.decode_step(cfg, params, caches, tokens, index,
-                                 enc_out=enc_out)
-        finally:
-            A.APPEND_FREE_DECODE = prev
+        return M.decode_step(cfg, params, caches, tokens, index,
+                             enc_out=enc_out, decode_mode=mode,
+                             kernel_config=kcfg)
 
     if cfg.encoder is not None:
         fn = jax.jit(lambda p, c, t, i, e: run(p, c, t, i, e),
@@ -252,4 +255,5 @@ def make_decode_step(cfg, mesh, *, batch: int, seq: int,
         fn = jax.jit(lambda p, c, t, i: run(p, c, t, i),
                      in_shardings=(psh, csh, dsh, scalar),
                      out_shardings=(dsh, csh))
-    return DecodeBundle(fn=fn, rules=rules, seq=seq)
+    return DecodeBundle(fn=fn, rules=rules, seq=seq, decode_mode=mode,
+                        kernel_config=kcfg)

@@ -6,10 +6,10 @@ dispatches per :class:`KernelConfig` (``pallas | ref | auto``) with the
 references as the semantic oracle (DESIGN.md Sec. 9)."""
 from .ops import (KernelConfig, default_kernel_config, flash_attention,
                   fused_dsgd_step, gossip_mix, pallas_shape_ok,
-                  resolve_config, set_default_kernel_config)
+                  resolve_config, sdpa, set_default_kernel_config)
 
 __all__ = [
     "KernelConfig", "default_kernel_config", "set_default_kernel_config",
     "resolve_config", "pallas_shape_ok",
-    "gossip_mix", "fused_dsgd_step", "flash_attention",
+    "gossip_mix", "fused_dsgd_step", "flash_attention", "sdpa",
 ]

@@ -1,23 +1,36 @@
 """Pallas TPU kernel: blocked (flash) attention, causal + sliding window.
 
 TPU-native adaptation of flash attention for the long-context configs
-(gemma2/gemma3 sliding window, 32k prefill):
+(gemma2/gemma3 sliding window, 32k prefill) AND the model stack's
+prefill/train path (wired through ``repro.kernels.ops.sdpa``):
 
   * grid = (batch*heads, q_blocks, kv_blocks); the kv dimension is the
     innermost (sequential on TPU), carrying the running max / denominator /
     accumulator in VMEM scratch across kv steps — the classic streaming
     softmax.
-  * blocks are MXU-aligned (q_block x head_dim and kv_block x head_dim with
-    128-multiple minor dims); logits tile (q_block x kv_block) stays in
-    VMEM/registers.
-  * blocks entirely outside the causal/window band are *skipped* via
-    ``pl.when`` (the VMEM fetch is still scheduled by the grid, but the MXU
-    work — the dominant cost — is elided); for a window w << T this makes
-    the kernel O(T*w) compute instead of O(T^2).
+  * GQA-grouped layout: ``k``/``v`` stay at KV heads; the k/v BlockSpec
+    index maps fold query head ``h`` onto kv head ``h // (H // KV)``, so
+    grouped caches are consumed without materialising the H-head repeat.
+  * ragged edges are masked in-kernel (iota position masks): any
+    ``Tq``/``Tk`` runs, not just 128-multiples.  Head dims are zero-padded
+    to the 128 lane width in the wrapper — exact for the q.k contraction,
+    and padded value columns are sliced off the output.
+  * per-batch ``q_start`` / ``k_valid_len`` int32 operands (SMEM): decode
+    and continued prefill attend a query at absolute position
+    ``q_start + i`` against the valid cache prefix ``[0, k_valid_len)``.
+    Keys at or beyond ``k_valid_len`` are masked to -inf and their value
+    rows zeroed before the accumulate, so garbage in the padded cache
+    region can never reach the output.
+  * blocks entirely outside the causal/window band or entirely beyond the
+    valid cache are *skipped* via ``pl.when`` (the VMEM fetch is still
+    scheduled by the grid, but the MXU work — the dominant cost — is
+    elided); for a window w << T this makes the kernel O(T*w) compute
+    instead of O(T^2).
   * optional logit soft-capping (gemma2) fused before the mask.
 
-Validated against ``ref.flash_attention_ref`` in interpret mode over a
-shape/dtype/window sweep (tests/test_kernels.py).
+Validated against ``ref.flash_attention_ref`` / ``ref.grouped_sdpa_ref``
+in interpret mode over a shape/dtype/window/GQA sweep
+(tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -29,11 +42,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 _NEG_INF = -1e30
+_LANE = 128
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-                  *, scale, causal, window, softcap, block_q, block_k,
-                  kv_offset, num_kv_blocks):
+def _flash_kernel(q_start_ref, k_valid_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale, causal, window, softcap,
+                  block_q, block_k, num_kv_blocks, tq):
     iq = pl.program_id(1)
     ik = pl.program_id(2)
 
@@ -43,36 +57,43 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    # absolute positions: queries are aligned so the LAST query attends to
-    # the LAST key (kv_offset = Tk - Tq).
-    q_pos = iq * block_q + kv_offset  # first query's absolute key-position
+    # absolute positions: query row r of this tile sits at position
+    # q_start + iq*block_q + r; cache slot s holds position s.
+    q_lo = q_start_ref[0, 0] + iq * block_q
+    k_valid = k_valid_ref[0, 0]
     k_lo = ik * block_k
-    # block-level skip: entirely above the diagonal, or entirely left of
-    # the sliding window.
-    skip = jnp.bool_(False)
+    # block-level skip: wholly beyond the valid cache prefix, entirely
+    # above the diagonal, or entirely left of the sliding window.
+    skip = k_lo >= k_valid
     if causal:
-        skip = skip | (k_lo > q_pos + block_q - 1)
+        skip = skip | (k_lo > q_lo + block_q - 1)
     if window is not None:
-        skip = skip | (k_lo + block_k - 1 <= q_pos - window)
+        skip = skip | (k_lo + block_k - 1 <= q_lo - window)
 
     @pl.when(jnp.logical_not(skip))
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
         k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
-        v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, Dv)
         logits = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale
         if softcap is not None:
             logits = softcap * jnp.tanh(logits / softcap)
-        qi = q_pos + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        qi = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
         kj = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
-        mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+        # validity first: covers both the ragged Tk edge (k_valid <= Tk)
+        # and a partially filled cache; masked-out key columns may hold
+        # edge-tile garbage, so their value rows are zeroed too.
+        mask = kj < k_valid
         if causal:
             mask &= kj <= qi
         if window is not None:
             mask &= kj > qi - window
         logits = jnp.where(mask, logits, _NEG_INF)
+        kv_rows = k_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, v.shape[-1]), 0)
+        v = jnp.where(kv_rows < k_valid, v, 0.0)
 
         m_prev = m_ref[:, 0]                          # (bq,)
         l_prev = l_ref[:, 0]
@@ -89,8 +110,21 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
     @pl.when(ik == num_kv_blocks - 1)
     def _finalize():
         l = l_ref[:, 0]
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        out = acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]
+        # zero ragged-edge query rows (their lanes hold garbage) before
+        # the dropped out-of-bounds write
+        rows = iq * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, out.shape, 0)
+        o_ref[0, 0] = jnp.where(rows < tq, out, 0.0).astype(o_ref.dtype)
+
+
+def _pad_lane(x: jnp.ndarray) -> jnp.ndarray:
+    """Zero-pad the trailing (head) dim up to the 128 lane width."""
+    d = x.shape[-1]
+    pad = (-d) % _LANE
+    if pad == 0:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -100,41 +134,66 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                            *, causal: bool = True, window: int | None = None,
                            softcap: float | None = None,
                            scale: float | None = None,
+                           q_start: jnp.ndarray | None = None,
+                           k_valid_len: jnp.ndarray | None = None,
                            block_q: int = 128, block_k: int = 128,
                            interpret: bool = False) -> jnp.ndarray:
-    """q: (B, H, Tq, D); k, v: (B, H, Tk, D).  Tq % block_q == 0 and
-    Tk % block_k == 0 (callers pad); kv heads pre-broadcast for GQA."""
+    """q: (B, H, Tq, D); k: (B, KV, Tk, D); v: (B, KV, Tk, Dv) with
+    H % KV == 0 (KV == H is the pre-broadcast layout).  Any Tq/Tk/D —
+    ragged tiles are masked, head dims zero-padded to the lane width.
+
+    ``q_start``: (B,) absolute position of the first query (default
+    ``Tk - Tq``: last query attends to the last key).  ``k_valid_len``:
+    (B,) number of valid cache entries (default ``Tk``)."""
     B, H, Tq, D = q.shape
-    Tk = k.shape[2]
+    KV, Tk = k.shape[1], k.shape[2]
+    Dv = v.shape[3]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
     if scale is None:
         scale = 1.0 / (D ** 0.5)
+    if q_start is None:
+        q_start = jnp.full((B,), Tk - Tq, jnp.int32)
+    else:
+        q_start = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32), (B,))
+    if k_valid_len is None:
+        k_valid = jnp.full((B,), Tk, jnp.int32)
+    else:
+        k_valid = jnp.minimum(
+            jnp.broadcast_to(jnp.asarray(k_valid_len, jnp.int32), (B,)), Tk)
+
+    qp, kp, vp = _pad_lane(q), _pad_lane(k), _pad_lane(v)
+    Dp, Dvp = qp.shape[-1], vp.shape[-1]
     block_q = min(block_q, Tq)
     block_k = min(block_k, Tk)
-    assert Tq % block_q == 0 and Tk % block_k == 0
-    nq = Tq // block_q
-    nk = Tk // block_k
+    nq = pl.cdiv(Tq, block_q)
+    nk = pl.cdiv(Tk, block_k)
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
         softcap=softcap, block_q=block_q, block_k=block_k,
-        kv_offset=Tk - Tq, num_kv_blocks=nk)
-    return pl.pallas_call(
+        num_kv_blocks=nk, tq=Tq)
+    smem = pl.BlockSpec((1, 1), lambda bh, iq, ik: (bh // H, 0),
+                        memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
         kernel,
         grid=(B * H, nq, nk),
         in_specs=[
-            pl.BlockSpec((1, 1, block_q, D),
+            smem, smem,
+            pl.BlockSpec((1, 1, block_q, Dp),
                          lambda bh, iq, ik: (bh // H, bh % H, iq, 0)),
-            pl.BlockSpec((1, 1, block_k, D),
-                         lambda bh, iq, ik: (bh // H, bh % H, ik, 0)),
-            pl.BlockSpec((1, 1, block_k, D),
-                         lambda bh, iq, ik: (bh // H, bh % H, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, Dp),
+                         lambda bh, iq, ik: (bh // H, (bh % H) // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, Dvp),
+                         lambda bh, iq, ik: (bh // H, (bh % H) // G, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, D),
+        out_specs=pl.BlockSpec((1, 1, block_q, Dvp),
                                lambda bh, iq, ik: (bh // H, bh % H, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, Dvp), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, D), jnp.float32),
-            pltpu.VMEM((block_q, 128), jnp.float32),
-            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, Dvp), jnp.float32),
+            pltpu.VMEM((block_q, _LANE), jnp.float32),
+            pltpu.VMEM((block_q, _LANE), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q_start.reshape(B, 1), k_valid.reshape(B, 1), qp, kp, vp)
+    return out[..., :Dv]

@@ -18,18 +18,20 @@ Backends:
 * ``ref`` — force the references.
 
 Shape support is centralised in :func:`pallas_shape_ok` — the single
-guard every entry point consults.  ``gossip_mix`` and
-``fused_dsgd_step`` mask their ragged edge tiles in-kernel, so ANY
-non-empty shape dispatches to Pallas (odd vocab rows, non-128 widths
-included); ``flash_attention`` still requires exact (128, 128) tile
-multiples.
+guard every entry point consults.  All three kernels mask their ragged
+edge tiles in-kernel, so ANY non-empty shape dispatches to Pallas (odd
+vocab rows, non-128 widths, ragged sequence lengths included);
+``flash_attention``/``sdpa`` additionally zero-pad head dims to the
+lane width in their wrapper.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .flash_attention import flash_attention_pallas
@@ -101,15 +103,16 @@ def pallas_shape_ok(kind: str, shape: tuple[int, ...]) -> bool:
       non-empty shape is supported.
     * ``fused_dsgd``: any non-empty shape (leaves are 2-D-normalised
       by :func:`fused_dsgd_step`; ragged tiles are masked in-kernel).
-    * ``flash_attention``: ``(Tq, Tk, D)`` — all three must be exact
-      multiples of 128 (no masked tiles in that kernel yet).
+    * ``flash_attention``: ``(Tq, Tk, D)`` — any non-empty shape (the
+      kernel masks ragged sequence tiles; head dims are zero-padded to
+      the lane width by the wrapper).
     """
     if any(d == 0 for d in shape):
         return False
     if kind in ("gossip_mix", "fused_dsgd"):
         return len(shape) >= 1
     if kind == "flash_attention":
-        return len(shape) == 3 and all(d % 128 == 0 for d in shape)
+        return len(shape) == 3
     raise ValueError(f"unknown kernel kind {kind!r}")
 
 
@@ -218,3 +221,88 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
                                       interpret=cfg.run_interpret)
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
                                    softcap=softcap, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# model-stack attention (grouped layout)
+# ---------------------------------------------------------------------------
+
+def sdpa(q, k, v, *, causal: bool = True, window=None, softcap=None,
+         scale=None, q_pos0=None, k_valid_len=None, q_chunk: int = 1024,
+         config: KernelConfig | None = None):
+    """Grouped-query attention in the model stack's layout — the entry
+    point ``repro.models.attention`` dispatches prefill/train/decode
+    attention through.
+
+    q: (B, Tq, H, hd);  k, v: (B, S, KV, hd[, hd_v]) with H % KV == 0
+    (grouped caches stay at KV heads).  Queries are contiguous: query i
+    sits at absolute position ``q_pos0 + i`` (default ``S - Tq``).
+    ``q_pos0`` must be a scalar — it is shared across the batch (the
+    custom VJP recomputes the backward through the reference math,
+    which holds one position vector for the whole batch; the kernel's
+    per-batch ``q_start`` operand stays internal until a per-request
+    ragged-prefill path needs it AND carries its own VJP).
+    ``k_valid_len`` is the (B,) valid-cache-prefix length.
+
+    ``ref`` is :func:`repro.kernels.ref.grouped_sdpa_ref` — bit-exact
+    with the streaming-softmax math the model layer historically ran
+    inline, and the semantic oracle for the Pallas path.  The Pallas
+    forward pairs with a custom VJP whose backward recomputes through
+    the reference math (the kernel itself has no backward), so the
+    train path can run the flash forward under ``jax.grad``.
+    """
+    cfg = resolve_config(config)
+    B, Tq, H, hd = q.shape
+    S = k.shape[1]
+    if not (cfg.use_pallas
+            and pallas_shape_ok("flash_attention", (Tq, S, hd))):
+        return ref.grouped_sdpa_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_pos0=q_pos0, k_valid_len=k_valid_len,
+            q_chunk=q_chunk)
+    statics = (causal, window, softcap, scale, q_chunk, cfg.run_interpret)
+    q_pos0 = S - Tq if q_pos0 is None else q_pos0
+    if jnp.ndim(q_pos0) != 0:
+        raise ValueError(f"q_pos0 must be a scalar (shared across the "
+                         f"batch), got shape {jnp.shape(q_pos0)}")
+    q_start = jnp.broadcast_to(jnp.asarray(q_pos0, jnp.int32), (B,))
+    k_valid = jnp.broadcast_to(
+        jnp.asarray(S if k_valid_len is None else k_valid_len, jnp.int32),
+        (B,))
+    return _sdpa_pallas(statics, q, k, v, q_start, k_valid)
+
+
+def _sdpa_pallas_fwd_call(statics, q, k, v, q_start, k_valid):
+    causal, window, softcap, scale, _, interpret = statics
+    out = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        softcap=softcap, scale=scale, q_start=q_start, k_valid_len=k_valid,
+        interpret=interpret)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _sdpa_pallas(statics, q, k, v, q_start, k_valid):
+    return _sdpa_pallas_fwd_call(statics, q, k, v, q_start, k_valid)
+
+
+def _sdpa_pallas_fwd(statics, q, k, v, q_start, k_valid):
+    return (_sdpa_pallas_fwd_call(statics, q, k, v, q_start, k_valid),
+            (q, k, v, q_start, k_valid))
+
+
+def _sdpa_pallas_bwd(statics, res, g):
+    causal, window, softcap, scale, q_chunk, _ = statics
+    q, k, v, q_start, k_valid = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.grouped_sdpa_ref(
+            q_, k_, v_, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_pos0=q_start[0], k_valid_len=k_valid,
+            q_chunk=q_chunk), q, k, v)
+    dq, dk, dv = vjp(g.astype(q.dtype))
+    zero_i = lambda a: np.zeros(a.shape, jax.dtypes.float0)  # noqa: E731
+    return dq, dk, dv, zero_i(q_start), zero_i(k_valid)
+
+
+_sdpa_pallas.defvjp(_sdpa_pallas_fwd, _sdpa_pallas_bwd)

@@ -7,7 +7,10 @@ directly via ``ops.py`` dispatch.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+_NEG_INF = -1e30
 
 
 def gossip_mix_ref(bufs: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
@@ -73,6 +76,69 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     p = _softmax(logits)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def grouped_sdpa_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                     scale=None, q_pos0=None, k_valid_len=None,
+                     q_chunk: int = 1024) -> jnp.ndarray:
+    """Grouped-query attention in the model stack's layout — the
+    memory-bounded streaming-softmax reference (scan over query chunks,
+    never materialising the full (T, S) logits) that
+    ``repro.models.attention`` historically ran inline; it is the
+    bit-exact ``ref`` backend behind ``ops.sdpa``.
+
+    q: (B, Tq, H, hd);  k, v: (B, S, KV, hd[, hd_v]) with H % KV == 0.
+    ``q_pos0``: absolute position of the first query (queries are
+    contiguous: position of query i is ``q_pos0 + i``; defaults to
+    ``S - Tq``).  ``k_valid_len``: (B,) number of valid cache entries
+    (for decode against a partially filled cache).
+    """
+    B, Tq, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    if q_pos0 is None:
+        q_pos0 = S - Tq
+    q_positions = q_pos0 + jnp.arange(Tq)
+    kpos = jnp.arange(S)
+
+    qg = q.reshape(B, Tq, KV, G, hd)
+
+    def block(qi, qpos_i):
+        # qi: (B, t, KV, G, hd) -> out (B, t, KV, G, hd_v)
+        logits = jnp.einsum("btkgd,bskd->btkgs", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        m = jnp.ones(jnp.broadcast_shapes(qpos_i[:, None].shape,
+                                          kpos[None, :].shape), dtype=bool)
+        if causal:
+            m &= kpos[None, :] <= qpos_i[:, None]
+        if window is not None:
+            m &= kpos[None, :] > qpos_i[:, None] - window
+        m = m[None, :, None, None, :]               # (1, t, 1, 1, S)
+        if k_valid_len is not None:
+            valid = kpos[None, :] < k_valid_len[:, None]      # (B, S)
+            m = m & valid[:, None, None, None, :]
+        logits = jnp.where(m, logits, _NEG_INF)
+        mx = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp(logits - mx)
+        out = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+        den = jnp.maximum(p.sum(-1), 1e-30)
+        return out / den[..., None]
+
+    if Tq <= q_chunk:
+        out = block(qg, q_positions)
+    else:
+        assert Tq % q_chunk == 0
+        nq = Tq // q_chunk
+        qs = qg.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        ps = q_positions.reshape(nq, q_chunk)
+        out = jax.lax.map(lambda t: block(*t), (qs, ps))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, KV, G, hd_v)
+    return out.reshape(B, Tq, H, hd_v).astype(q.dtype)
 
 
 def _softmax(logits: jnp.ndarray) -> jnp.ndarray:

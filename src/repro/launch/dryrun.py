@@ -136,7 +136,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool,
                                      seq=info["seq"])
         bundle = make_prefill(cfg, mesh, batch=info["global_batch"],
                               seq=info["seq"])
-        lowered = bundle.fn(batch).lower(
+        lowered = bundle.fn.lower(
             M.param_specs(cfg, jnp.bfloat16), batch)
         meta = {}
     else:  # decode

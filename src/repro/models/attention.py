@@ -1,33 +1,38 @@
 """Attention: GQA/MQA with RoPE, sliding window, softcap, QK-norm, KV cache.
 
-The core ``sdpa`` uses a memory-bounded pure-jnp streaming softmax (scan
-over query chunks) so that lowering on any backend never materialises the
-full (T, S) logits for long sequences; the Pallas flash kernel behind
-``repro.kernels.ops.flash_attention`` is validated against the same math
-but is NOT wired into this path yet — it lacks the GQA-grouped layout
-and masked ragged tiles this layer needs (DESIGN.md Sec. 9 tracks the
-gap).  Decode (Tq == 1) takes a direct einsum path that keeps the
-reduction over the (possibly sequence-sharded) cache axis — GSPMD turns
-that into partial max/sum + small all-reduces (LSE-combine), which is how
-``long_500k`` serves with the KV cache sharded across the data axis.
+Prefill/train/decode attention dispatches through
+``repro.kernels.ops.sdpa`` under the repo-wide :class:`KernelConfig`
+policy: the ``ref`` backend is the memory-bounded pure-jnp streaming
+softmax (``repro.kernels.ref.grouped_sdpa_ref`` — bit-exact with the
+math this layer historically ran inline), and the ``pallas`` backend is
+the flash-attention kernel with the GQA-grouped layout, masked ragged
+tiles and the ``k_valid_len`` cache-prefix operand this layer needs
+(DESIGN.md Sec. 9/10).  The append-free serve step (``decode_mode=
+"append_free"``, Tq == 1) takes a direct two-piece LSE-combine path that
+keeps the reduction over the (possibly sequence-sharded) cache axis —
+GSPMD turns that into partial max/sum + small all-reduces (LSE-combine),
+which is how ``long_500k`` serves with the KV cache sharded across the
+data axis.
+
+Decode behaviour is selected by the explicit ``decode_mode`` argument
+threaded down from ``model.decode_step`` — there is no mutable module
+flag read at trace time (the historical ``APPEND_FREE_DECODE`` global,
+trace-scoped by monkey-patching in ``dist/steps.py``, is gone for the
+same reason ``FORCE_PALLAS_INTERPRET`` was: a flag read at trace time
+silently poisons later traces).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .layers import dense, dense_init, normal_init, rmsnorm, rmsnorm_init, rope
+from repro.kernels import ops
+
+from .layers import dense, dense_init, rmsnorm, rmsnorm_init, rope
 
 _NEG_INF = -1e30
 
-
-def _mask(qpos, kpos, causal: bool, window: int | None):
-    m = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), dtype=bool)
-    if causal:
-        m &= kpos <= qpos
-    if window is not None:
-        m &= kpos > qpos - window
-    return m
+DECODE_MODES = ("dus", "append_free")
 
 
 # GQA formulation: "grouped" keeps K/V at KV heads and reshapes Q to
@@ -40,12 +45,6 @@ def _mask(qpos, kpos, causal: bool, window: int | None):
 # layout, so it stays the default.  "repeat" remains available for
 # head-shardable training layouts.
 GQA_MODE = "grouped"
-
-# Append-free decode (no cache write per step; see §Perf iteration A2 and
-# the comment at the use site).  Enabled by the serving step factory via
-# make_decode_step(..., append_free=True); the returned cache is passed
-# through unchanged and appends are the serving loop's batched concern.
-APPEND_FREE_DECODE = False
 
 
 def sdpa_two_piece(q, k_cache, v_cache, k_new, v_new, *, causal=True,
@@ -94,57 +93,35 @@ def sdpa_two_piece(q, k_cache, v_cache, k_new, v_new, *, causal=True,
 
 def sdpa(q, k, v, *, causal=True, window=None, softcap=None, scale=None,
          q_positions=None, k_valid_len=None, q_chunk=1024,
-         gqa_mode=None):
-    """Grouped-query attention.
+         gqa_mode=None, kernel_config=None):
+    """Grouped-query attention (thin shim over ``ops.sdpa``).
 
     q: (B, Tq, H, hd);  k, v: (B, S, KV, hd) with H % KV == 0.
-    q_positions: (Tq,) absolute positions of the queries (defaults to
-    S - Tq + arange(Tq)).  k_valid_len: (B,) number of valid cache entries
-    (for decode against a partially filled cache)."""
+    q_positions: (Tq,) absolute positions of the queries — must be
+    contiguous (every call site in this repo passes ``pos0 + arange``;
+    defaults to ``S - Tq + arange(Tq)``).  k_valid_len: (B,) number of
+    valid cache entries (for decode against a partially filled cache).
+    ``kernel_config`` picks the backend (None -> process default)."""
+    import numpy as np
     B, Tq, H, hd = q.shape
     S, KV = k.shape[1], k.shape[2]
     if (gqa_mode or GQA_MODE) == "repeat" and KV != H:
         k = jnp.repeat(k, H // KV, axis=2)
         v = jnp.repeat(v, H // KV, axis=2)
-        KV = H
-    hd_v = v.shape[-1]
-    G = H // KV
-    if scale is None:
-        scale = hd ** -0.5
     if q_positions is None:
-        q_positions = jnp.arange(Tq) + (S - Tq)
-    kpos = jnp.arange(S)
-
-    qg = q.reshape(B, Tq, KV, G, hd)
-
-    def block(qi, qpos_i):
-        # qi: (B, t, KV, G, hd) -> out (B, t, KV, G, hd)
-        logits = jnp.einsum("btkgd,bskd->btkgs", qi.astype(jnp.float32),
-                            k.astype(jnp.float32)) * scale
-        if softcap is not None:
-            logits = softcap * jnp.tanh(logits / softcap)
-        m = _mask(qpos_i[:, None], kpos[None, :], causal, window)
-        m = m[None, :, None, None, :]               # (1, t, 1, 1, S)
-        if k_valid_len is not None:
-            valid = kpos[None, :] < k_valid_len[:, None]      # (B, S)
-            m = m & valid[:, None, None, None, :]
-        logits = jnp.where(m, logits, _NEG_INF)
-        mx = jnp.max(logits, axis=-1, keepdims=True)
-        p = jnp.exp(logits - mx)
-        out = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
-        den = jnp.maximum(p.sum(-1), 1e-30)
-        return out / den[..., None]
-
-    if Tq <= q_chunk:
-        out = block(qg, q_positions)
+        q_pos0 = S - Tq
     else:
-        assert Tq % q_chunk == 0
-        nq = Tq // q_chunk
-        qs = qg.reshape(B, nq, q_chunk, KV, G, hd).transpose(1, 0, 2, 3, 4, 5)
-        ps = q_positions.reshape(nq, q_chunk)
-        out = jax.lax.map(lambda t: block(*t), (qs, ps))
-        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, KV, G, hd_v)
-    return out.reshape(B, Tq, H, hd_v).astype(q.dtype)
+        if not isinstance(q_positions, jax.core.Tracer):
+            qp = np.asarray(q_positions)
+            if not np.array_equal(qp, qp.flat[0] + np.arange(Tq)):
+                raise ValueError(
+                    "sdpa requires contiguous q_positions (pos0 + "
+                    "arange(Tq)); packed/gathered position vectors are "
+                    "not supported by the dispatch layer")
+        q_pos0 = q_positions[0]
+    return ops.sdpa(q, k, v, causal=causal, window=window, softcap=softcap,
+                    scale=scale, q_pos0=q_pos0, k_valid_len=k_valid_len,
+                    q_chunk=q_chunk, config=kernel_config)
 
 
 # ---------------------------------------------------------------------------
@@ -169,10 +146,18 @@ def attn_init(key, d_model, n_heads, n_kv, head_dim, dtype, *,
 def attn_apply(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
                causal=True, window=None, softcap=None, scale=None,
                cache=None, cache_index=None, positions=None,
-               kv_override=None):
+               kv_override=None, decode_mode="dus", kernel_config=None):
     """x: (B, T, D).  With ``cache`` (dict k/v (B, S, KV, hd)) performs a
     decode/prefill update at ``cache_index``.  ``kv_override`` supplies
-    external K/V inputs (cross-attention)."""
+    external K/V inputs (cross-attention).  ``decode_mode`` selects the
+    single-token cache policy: ``"dus"`` writes the fresh K/V into the
+    cache (dynamic-update-slice) before attending; ``"append_free"``
+    attends over (frozen cache, fresh token) with an LSE combine and
+    returns the cache untouched (appends become the serving loop's
+    batched concern)."""
+    if decode_mode not in DECODE_MODES:
+        raise ValueError(f"decode_mode must be one of {DECODE_MODES}, got "
+                         f"{decode_mode!r}")
     B, T, D = x.shape
     q = dense(p["wq"], x).reshape(B, T, n_heads, head_dim)
     if kv_override is None:
@@ -196,7 +181,7 @@ def attn_apply(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
 
     k_valid = None
     if cache is not None:
-        if kv_override is None and APPEND_FREE_DECODE and T == 1:
+        if kv_override is None and decode_mode == "append_free" and T == 1:
             # Append-free serve step (EXPERIMENTS.md §Perf iteration A2):
             # with a sequence-sharded cache, dynamic-update-slice at a
             # traced index lowers to a full-cache select (GSPMD can't
@@ -225,11 +210,13 @@ def attn_apply(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
             qpos = positions
         out = sdpa(q, k, v, causal=causal and kv_override is None,
                    window=window, softcap=softcap, scale=scale,
-                   q_positions=qpos, k_valid_len=k_valid)
+                   q_positions=qpos, k_valid_len=k_valid,
+                   kernel_config=kernel_config)
     else:
         out = sdpa(q, xk, xv, causal=causal, window=window, softcap=softcap,
                    scale=scale,
-                   q_positions=positions if kv_override is None else None)
+                   q_positions=positions if kv_override is None else None,
+                   kernel_config=kernel_config)
         cache = None
     y = dense(p["wo"], out.reshape(B, T, n_heads * head_dim))
     return y, cache

@@ -56,8 +56,11 @@ def _mla_kw(cfg: ArchConfig) -> dict:
 
 
 def layer_apply(p: dict, x, cfg: ArchConfig, spec: LayerSpec, *,
-                cache=None, cache_index=None, enc_out=None, causal=True):
-    """Returns (x, new_cache, aux_loss)."""
+                cache=None, cache_index=None, enc_out=None, causal=True,
+                decode_mode="dus", kernel_config=None):
+    """Returns (x, new_cache, aux_loss).  ``decode_mode`` and
+    ``kernel_config`` are threaded down to the attention layers (mamba
+    layers ignore both)."""
     aux = jnp.float32(0.0)
     h = rmsnorm(p["ln1"], x)
     if spec.kind == "attn":
@@ -66,14 +69,15 @@ def layer_apply(p: dict, x, cfg: ArchConfig, spec: LayerSpec, *,
                 p["attn"], h, n_heads=cfg.num_heads,
                 rope_theta=spec.rope_theta, cache=_sub(cache, "attn"),
                 cache_index=cache_index, softcap=cfg.attn_softcap,
-                **_mla_kw(cfg))
+                kernel_config=kernel_config, **_mla_kw(cfg))
         else:
             a, cache_a = attn_apply(
                 p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
                 head_dim=cfg.head_dim, rope_theta=spec.rope_theta,
                 causal=causal, window=spec.window, softcap=cfg.attn_softcap,
                 scale=cfg.attn_scale, cache=_sub(cache, "attn"),
-                cache_index=cache_index)
+                cache_index=cache_index, decode_mode=decode_mode,
+                kernel_config=kernel_config)
         if "ln1_post" in p:
             a = rmsnorm(p["ln1_post"], a)
         new_cache = {"attn": cache_a} if cache_a is not None else {}
@@ -91,7 +95,7 @@ def layer_apply(p: dict, x, cfg: ArchConfig, spec: LayerSpec, *,
         cx, _ = attn_apply(
             p["cross"], hx, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
             head_dim=cfg.head_dim, rope_theta=None, causal=False,
-            kv_override=enc_out)
+            kv_override=enc_out, kernel_config=kernel_config)
         x = x + cx
 
     if spec.ffn != "none":
@@ -157,7 +161,8 @@ def stack_init(key, cfg: ArchConfig, dtype) -> dict:
 
 
 def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
-                cache_index=None, enc_out=None, causal=True, remat=False):
+                cache_index=None, enc_out=None, causal=True, remat=False,
+                decode_mode="dus", kernel_config=None):
     """caches: {"prologue": [...], "blocks": stacked-per-block pytree}."""
     aux_total = jnp.float32(0.0)
     new_pro_caches = []
@@ -165,7 +170,9 @@ def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
         c = None if caches is None else caches["prologue"][i]
         x, nc, aux = layer_apply(params["prologue"][i], x, cfg, spec,
                                  cache=c, cache_index=cache_index,
-                                 enc_out=enc_out, causal=causal)
+                                 enc_out=enc_out, causal=causal,
+                                 decode_mode=decode_mode,
+                                 kernel_config=kernel_config)
         new_pro_caches.append(nc)
         aux_total = aux_total + aux
 
@@ -180,7 +187,9 @@ def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
         for i, spec in enumerate(cfg.pattern):
             xc, nci, aux_i = layer_apply(bp[i], xc, cfg, spec, cache=bc[i],
                                          cache_index=cache_index,
-                                         enc_out=enc_out, causal=causal)
+                                         enc_out=enc_out, causal=causal,
+                                         decode_mode=decode_mode,
+                                         kernel_config=kernel_config)
             new_bc.append(nci)
             auxc = auxc + aux_i
         return (xc, auxc), new_bc if caches is not None else None

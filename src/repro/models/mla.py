@@ -37,7 +37,7 @@ def mla_init(key, d_model, n_heads, dtype, *, q_lora_rank=1536,
 def mla_apply(p, x, *, n_heads, q_lora_rank=1536, kv_lora_rank=512,
               qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
               rope_theta=10000.0, cache=None, cache_index=None,
-              softcap=None):
+              softcap=None, kernel_config=None):
     """x: (B, T, D).  cache = {"ckv": (B, S, kv_lora), "krope": (B, S, rope)}.
     Returns (out, cache)."""
     B, T, D = x.shape
@@ -80,5 +80,6 @@ def mla_apply(p, x, *, n_heads, q_lora_rank=1536, kv_lora_rank=512,
 
     out = sdpa(qf, k, v, causal=True, softcap=softcap,
                scale=qk_dim ** -0.5,
-               q_positions=positions, k_valid_len=k_valid)
+               q_positions=positions, k_valid_len=k_valid,
+               kernel_config=kernel_config)
     return dense(p["wo"], out.reshape(B, T, n_heads * v_head_dim)), cache

@@ -85,15 +85,17 @@ def _out_proj(cfg, params):
     return params["lm_head"]["w"]
 
 
-def encode(cfg: ArchConfig, params, frames) -> jnp.ndarray:
+def encode(cfg: ArchConfig, params, frames, *,
+           kernel_config=None) -> jnp.ndarray:
     """frames: (B, T_src, d_model) stub-frontend embeddings."""
     x, _, _ = stack_apply(params["encoder"]["stack"], frames, _enc_cfg(cfg),
-                          causal=False)
+                          causal=False, kernel_config=kernel_config)
     return rmsnorm(params["encoder"]["final_norm"], x)
 
 
 def backbone(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
-             enc_out=None, caches=None, cache_index=None, remat=False):
+             enc_out=None, caches=None, cache_index=None, remat=False,
+             decode_mode="dus", kernel_config=None):
     """Returns (hidden, new_caches, aux)."""
     x = embed(params["embed"], tokens)
     if cfg.embed_scale:
@@ -102,19 +104,26 @@ def backbone(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
     x, caches, aux = stack_apply(params["stack"], x, cfg, caches=caches,
                                  cache_index=cache_index, enc_out=enc_out,
-                                 remat=remat)
+                                 remat=remat, decode_mode=decode_mode,
+                                 kernel_config=kernel_config)
     return rmsnorm(params["final_norm"], x), caches, aux
 
 
-def loss_fn(cfg: ArchConfig, params, batch, *, remat=False):
+def loss_fn(cfg: ArchConfig, params, batch, *, remat=False,
+            kernel_config=None):
     """Next-token CE (+ router aux + optional MTP aux).  labels == -100
-    are ignored; VLM prefix positions are prepended as ignored labels."""
+    are ignored; VLM prefix positions are prepended as ignored labels.
+    ``kernel_config`` picks the attention backend; factories that pin
+    compiled executables resolve it eagerly and pass it down (DESIGN.md
+    Sec. 9)."""
     enc_out = None
     if cfg.encoder is not None:
-        enc_out = encode(cfg, params, batch["frames"])
+        enc_out = encode(cfg, params, batch["frames"],
+                         kernel_config=kernel_config)
     h, _, aux = backbone(cfg, params, batch["tokens"],
                          prefix_embeds=batch.get("prefix_embeds"),
-                         enc_out=enc_out, remat=remat)
+                         enc_out=enc_out, remat=remat,
+                         kernel_config=kernel_config)
     labels = batch["labels"]
     if batch.get("prefix_embeds") is not None:
         npfx = batch["prefix_embeds"].shape[1]
@@ -146,18 +155,20 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
 
 
 def prefill(cfg: ArchConfig, params, batch, max_seq: int,
-            cache_dtype=jnp.bfloat16):
+            cache_dtype=jnp.bfloat16, *, kernel_config=None):
     """Run the prompt through the model, filling a fresh KV cache.
     Returns (last-position logits, caches, enc_out|None)."""
     tokens = batch["tokens"]
     B = tokens.shape[0]
     enc_out = None
     if cfg.encoder is not None:
-        enc_out = encode(cfg, params, batch["frames"])
+        enc_out = encode(cfg, params, batch["frames"],
+                         kernel_config=kernel_config)
     caches = init_cache(cfg, B, max_seq, cache_dtype)
     h, caches, _ = backbone(cfg, params, tokens,
                             prefix_embeds=batch.get("prefix_embeds"),
-                            enc_out=enc_out, caches=caches, cache_index=0)
+                            enc_out=enc_out, caches=caches, cache_index=0,
+                            kernel_config=kernel_config)
     logits = h[:, -1:] @ _out_proj(cfg, params)
     if cfg.final_softcap is not None:
         logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
@@ -165,11 +176,16 @@ def prefill(cfg: ArchConfig, params, batch, max_seq: int,
 
 
 def decode_step(cfg: ArchConfig, params, caches, tokens, index,
-                enc_out=None):
+                enc_out=None, *, decode_mode="dus", kernel_config=None):
     """One-token step.  tokens: (B, 1); index: scalar position of that
-    token (cache filled for [0, index))."""
+    token (cache filled for [0, index)).  ``decode_mode`` is the explicit
+    cache policy threaded to the attention layers: ``"dus"`` writes the
+    fresh K/V at ``index``; ``"append_free"`` attends over the frozen
+    cache + fresh token and returns the cache untouched."""
     h, caches, _ = backbone(cfg, params, tokens, enc_out=enc_out,
-                            caches=caches, cache_index=index)
+                            caches=caches, cache_index=index,
+                            decode_mode=decode_mode,
+                            kernel_config=kernel_config)
     logits = h @ _out_proj(cfg, params)
     if cfg.final_softcap is not None:
         logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)

@@ -1,0 +1,13 @@
+"""Serving runtime: the compiled decode engine and on-device sampling.
+
+``make_engine`` compiles prefill + the WHOLE generation phase (one
+``lax.scan`` over token positions, sampling included) into a single
+executable per configuration — see ``repro.serve.engine`` and DESIGN.md
+Sec. 10."""
+from .engine import GenerationBundle, decode_logits_scan, make_engine
+from .sampling import SamplingParams, sample_token
+
+__all__ = [
+    "GenerationBundle", "make_engine", "decode_logits_scan",
+    "SamplingParams", "sample_token",
+]

@@ -1,0 +1,187 @@
+"""Compiled decode engine: the whole generation phase is ONE executable.
+
+The historical serving path (``launch/serve.py`` before this engine) ran
+a Python for-loop around a jitted one-token step: one XLA dispatch plus
+a host round-trip (the argmax) per generated token.  The same discipline
+the paper applies to gossip — run the whole exchange on a fixed,
+compiled schedule instead of ad-hoc per-step dispatch — applies to
+generation: :func:`make_engine` compiles prefill once and the entire
+decode phase into a single ``lax.scan`` over token positions, so
+generating N tokens issues exactly one compiled executable call and no
+token, logit or sampling decision ever leaves the device.
+
+Scan carry = (KV caches, previous token, done-mask, position); the
+per-step body is ``model.decode_step`` (explicit ``decode_mode``, no
+mutable flags) followed by the on-device sampling layer
+(:mod:`repro.serve.sampling` — greedy / temperature / top-k with
+per-request PRNG streams).  With an ``eos_id``, finished requests are
+frozen by the done-mask and, once EVERY request is done, a ``lax.cond``
+skips the model body entirely for the remaining steps — early exit
+inside the compiled loop.
+
+Engines are memoized on ``(cfg, mesh, batch/shape statics,
+SamplingParams, decode_mode, KernelConfig)`` — the same cache-key
+discipline as ``make_method`` / ``compiled_scan_run`` (DESIGN.md
+Sec. 9): the kernel/sampling policy is resolved eagerly at construction
+and baked into the bundle, so later flips of a process-wide default
+cannot silently retarget a built engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (ShardingRules, cache_partition_specs,
+                                 param_partition_specs)
+from repro.dist.steps import _dp_entry, _shardings, make_prefill
+from repro.kernels import ops
+from repro.models import model as M
+
+from .sampling import SamplingParams, request_keys, sample_token, step_keys
+
+
+def decode_logits_scan(cfg, params, caches, tokens, index0, *, enc_out=None,
+                       decode_mode="dus", kernel_config=None):
+    """Teacher-forced decode scan: feed ``tokens[:, t]`` at position
+    ``index0 + t`` and return the per-step logits ``(B, T, V)`` plus the
+    final caches — the scoring building block, and the oracle that
+    pins scan-decode == per-token-loop == full-prefill logits parity
+    (tests/test_serve_engine.py)."""
+    def body(carry, tok):
+        caches, idx = carry
+        logits, caches = M.decode_step(cfg, params, caches, tok[:, None],
+                                       idx, enc_out=enc_out,
+                                       decode_mode=decode_mode,
+                                       kernel_config=kernel_config)
+        return (caches, idx + 1), logits[:, 0]
+
+    (caches, _), ls = jax.lax.scan(
+        body, (caches, jnp.asarray(index0, jnp.int32)), tokens.T)
+    return ls.transpose(1, 0, 2), caches
+
+
+@dataclass(frozen=True)
+class GenerationBundle:
+    """Compiled prefill + single-scan generation phase.
+
+    ``prefill_fn``: jitted ``(params, batch) -> (logits, caches, enc)``.
+    ``generate_fn``: jitted ``(params, logits, caches, key[, enc]) ->
+    (tokens, done, caches)`` — the one executable that produces ALL
+    ``max_new`` tokens.  ``dispatch_counter[0]`` counts its invocations
+    (the serving benchmark and tests pin the 1-call-per-generation
+    contract against it)."""
+    prefill_fn: Any
+    generate_fn: Any
+    rules: ShardingRules
+    seq: int
+    index0: int
+    max_new: int
+    sampling: SamplingParams
+    eos_id: int | None
+    decode_mode: str
+    kernel_config: ops.KernelConfig
+    dispatch_counter: list = field(default_factory=lambda: [0])
+
+    def generate(self, params, batch, key=None):
+        """Prefill ``batch`` then generate ``max_new`` tokens in one
+        compiled call.  Returns ``(tokens (B, max_new) int32,
+        done (B,) bool)``."""
+        logits, caches, enc = self.prefill_fn(params, batch)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        self.dispatch_counter[0] += 1
+        if enc is not None:
+            tokens, done, _ = self.generate_fn(params, logits, caches, key,
+                                               enc)
+        else:
+            tokens, done, _ = self.generate_fn(params, logits, caches, key)
+        return tokens, done
+
+
+@lru_cache(maxsize=None)
+def make_engine(cfg, mesh, *, batch: int, prompt_len: int, max_new: int,
+                sampling: SamplingParams = SamplingParams(),
+                eos_id: int | None = None, prefix_len: int = 0,
+                param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                kernel_config: ops.KernelConfig | None = None
+                ) -> GenerationBundle:
+    """Build (or fetch the memoized) generation engine for one serving
+    configuration.  ``prefix_len`` counts non-token prefix positions
+    (vision prefix embeddings).  The KV cache covers
+    ``prompt_len + prefix_len + max_new`` positions."""
+    kcfg = ops.resolve_config(kernel_config)
+    mode = "dus"   # scan decode appends every step; append-free is the
+    #                single-step factory's concern (see DESIGN.md Sec. 10)
+    index0 = prompt_len + prefix_len
+    seq = index0 + max_new
+    pre = make_prefill(cfg, mesh, batch=batch, seq=seq,
+                       param_dtype=param_dtype, cache_dtype=cache_dtype,
+                       kernel_config=kcfg)
+    rules = pre.rules
+    psh = _shardings(mesh, param_partition_specs(
+        M.param_specs(cfg, param_dtype), rules))
+    cache_sds = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, seq, cache_dtype))
+    csh = _shardings(mesh, cache_partition_specs(cache_sds, rules))
+    dsh = NamedSharding(mesh, P(_dp_entry(rules, batch)))
+    repl = NamedSharding(mesh, P())
+
+    def _generate(params, logits0, caches, key, enc_out=None):
+        keys = request_keys(key, batch)
+        tok = sample_token(logits0[:, -1].astype(jnp.float32), sampling,
+                           step_keys(keys, index0) if sampling.needs_rng
+                           else None)
+        done = (tok == eos_id) if eos_id is not None \
+            else jnp.zeros((batch,), bool)
+
+        def live(args):
+            caches, tok, done, idx = args
+            logits, caches = M.decode_step(
+                cfg, params, caches, tok[:, None], idx, enc_out=enc_out,
+                decode_mode=mode, kernel_config=kcfg)
+            nxt = sample_token(logits[:, -1].astype(jnp.float32), sampling,
+                               step_keys(keys, idx + 1)
+                               if sampling.needs_rng else None)
+            if eos_id is not None:
+                nxt = jnp.where(done, eos_id, nxt)
+                done = done | (nxt == eos_id)
+            return caches, nxt, done
+
+        def body(carry, _):
+            caches, tok, done, idx = carry
+            if eos_id is None:
+                caches, nxt, done = live((caches, tok, done, idx))
+            else:
+                # whole-batch early exit: once every request is done the
+                # model body is skipped for the remaining scan steps
+                caches, nxt, done = jax.lax.cond(
+                    done.all(),
+                    lambda args: (args[0], args[1], args[2]),
+                    live, (caches, tok, done, idx))
+            return (caches, nxt, done, idx + 1), nxt
+
+        toks = tok[:, None]
+        if max_new > 1:
+            (caches, _, done, _), ys = jax.lax.scan(
+                body, (caches, tok, done, jnp.int32(index0)),
+                None, length=max_new - 1)
+            toks = jnp.concatenate([toks, ys.T], axis=1)
+        return toks, done, caches
+
+    if cfg.encoder is not None:
+        gen = jax.jit(lambda p, l, c, k, e: _generate(p, l, c, k, e),
+                      in_shardings=(psh, dsh, csh, repl, dsh),
+                      out_shardings=(dsh, dsh, csh))
+    else:
+        gen = jax.jit(lambda p, l, c, k: _generate(p, l, c, k),
+                      in_shardings=(psh, dsh, csh, repl),
+                      out_shardings=(dsh, dsh, csh))
+    return GenerationBundle(prefill_fn=pre.fn, generate_fn=gen, rules=rules,
+                            seq=seq, index0=index0, max_new=max_new,
+                            sampling=sampling, eos_id=eos_id,
+                            decode_mode=mode, kernel_config=kcfg)

@@ -1,0 +1,78 @@
+"""On-device sampling layer for the decode engine.
+
+Everything here is pure jnp and runs INSIDE the compiled generation
+scan — no logits ever leave the device for the sampling decision (the
+historical serving loop argmaxed on the host every token, paying a
+device->host sync per step).
+
+:class:`SamplingParams` is a frozen, hashable value object: it is part
+of the :func:`repro.serve.engine.make_engine` cache key, so two engines
+with different sampling policies compile and cache independently (the
+same discipline ``KernelConfig`` established for kernel dispatch).
+
+Per-request PRNG streams: the engine splits its base key into one key
+per request slot, and each step folds the absolute token position into
+the request's key.  A request's sampled sequence therefore depends only
+on (its key, its logits), not on the batch it shares or on how many
+steps other requests ran — the property that makes batched continuous
+serving reproducible per request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_MODES = ("greedy", "sample")
+_NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Hashable sampling policy.
+
+    ``mode``: ``greedy`` (argmax; temperature/top_k ignored) or
+    ``sample`` (softmax sampling at ``temperature``, optionally
+    truncated to the ``top_k`` highest-probability tokens)."""
+    mode: str = "greedy"
+    temperature: float = 1.0
+    top_k: int | None = None
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got "
+                             f"{self.mode!r}")
+        if self.mode == "sample" and not self.temperature > 0.0:
+            raise ValueError("sample mode needs temperature > 0 "
+                             "(use mode='greedy' for argmax decoding)")
+        if self.top_k is not None and self.top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {self.top_k}")
+
+    @property
+    def needs_rng(self) -> bool:
+        return self.mode == "sample"
+
+
+def request_keys(key, batch: int):
+    """One independent PRNG key per request slot."""
+    return jax.random.split(key, batch)
+
+
+def step_keys(keys, index):
+    """Fold the absolute token position into each request's stream."""
+    return jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, index)
+
+
+def sample_token(logits, params: SamplingParams, keys=None) -> jnp.ndarray:
+    """logits: (B, V) -> (B,) int32 token ids.
+
+    ``keys``: per-request keys for this step (required in sample mode;
+    ignored for greedy)."""
+    if params.mode == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / params.temperature
+    if params.top_k is not None and params.top_k < l.shape[-1]:
+        kth = jax.lax.top_k(l, params.top_k)[0][..., -1:]
+        l = jnp.where(l < kth, _NEG_INF, l)
+    return jax.vmap(jax.random.categorical)(keys, l).astype(jnp.int32)

@@ -308,7 +308,7 @@ def test_serve_steps_run_sharded():
         pre = make_prefill(cfg, mesh, batch=B, seq=S,
                            param_dtype=jnp.float32,
                            cache_dtype=jnp.float32)
-        logits, cache, enc = pre.fn(batch)(params, batch)
+        logits, cache, enc = pre.fn(params, batch)
         assert logits.shape == (B, 1, cfg.vocab_size)
         dec = make_decode_step(cfg, mesh, batch=B, seq=S,
                                param_dtype=jnp.float32,

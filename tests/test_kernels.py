@@ -132,3 +132,103 @@ def test_flash_attention_non_causal():
     want = ref.flash_attention_ref(q, k, v, causal=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
                                rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention: GQA grouping, ragged tiles, k_valid_len/q_start operands
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (4, 1)])
+def test_flash_attention_gqa_grouped_matches_broadcast(H, KV, dtype):
+    """Grouped KV heads (the serving cache layout) == pre-broadcast."""
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = _rand(kq, (2, H, 64, 64), dtype)
+    k = _rand(kk, (2, KV, 64, 64), dtype)
+    v = _rand(kv, (2, KV, 64, 64), dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True,
+                                 block_q=32, block_k=32)
+    G = H // KV
+    want = ref.flash_attention_ref(q, jnp.repeat(k, G, axis=1),
+                                   jnp.repeat(v, G, axis=1), causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("Tq,Tk,D,Dv", [
+    (37, 53, 64, 64),    # ragged both ways, sub-lane head dim
+    (1, 40, 64, 64),     # single-token decode shape
+    (100, 100, 128, 128),
+    (16, 80, 48, 32),    # Dv != D (the MLA value head)
+])
+def test_flash_attention_ragged_and_padded_dims(Tq, Tk, D, Dv):
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = _rand(kq, (2, 2, Tq, D), jnp.float32)
+    k = _rand(kk, (2, 2, Tk, D), jnp.float32)
+    v = _rand(kv, (2, 2, Tk, Dv), jnp.float32)
+    got = flash_attention_pallas(q, k, v, causal=True, interpret=True,
+                                 block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("valid,window", [(1, None), (17, None), (40, None),
+                                          (17, 8)])
+def test_flash_attention_k_valid_len_and_q_start(valid, window):
+    """Decode against a partially filled cache: only the first ``valid``
+    cache slots participate; the query sits at position ``valid - 1``."""
+    kq, kk, kv = jax.random.split(KEY, 3)
+    B, H, S, D = 2, 3, 40, 64
+    q = _rand(kq, (B, H, 1, D), jnp.float32)
+    k = _rand(kk, (B, H, S, D), jnp.float32)
+    v = _rand(kv, (B, H, S, D), jnp.float32)
+    got = flash_attention_pallas(
+        q, k, v, causal=True, window=window,
+        q_start=jnp.full((B,), valid - 1, jnp.int32),
+        k_valid_len=jnp.full((B,), valid, jnp.int32),
+        interpret=True, block_q=8, block_k=16)
+    want = ref.flash_attention_ref(q, k[:, :, :valid], v[:, :, :valid],
+                                   causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_poisoned_cache_tail_is_masked():
+    """Garbage (NaN/inf) beyond k_valid_len must never reach the output —
+    the kernel masks logits AND zeroes the dead value rows."""
+    kq, kk, kv = jax.random.split(KEY, 3)
+    B, H, S, D, valid = 1, 2, 32, 64, 11
+    q = _rand(kq, (B, H, 1, D), jnp.float32)
+    k = _rand(kk, (B, H, S, D), jnp.float32)
+    v = _rand(kv, (B, H, S, D), jnp.float32)
+    k = k.at[:, :, valid:].set(jnp.nan)
+    v = v.at[:, :, valid:].set(jnp.inf)
+    got = flash_attention_pallas(
+        q, k, v, causal=True, q_start=jnp.full((B,), valid - 1, jnp.int32),
+        k_valid_len=jnp.full((B,), valid, jnp.int32), interpret=True,
+        block_q=8, block_k=16)
+    want = ref.flash_attention_ref(q, k[:, :, :valid], v[:, :, :valid],
+                                   causal=True)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_grouped_sdpa_ref_is_bit_exact_with_model_shim():
+    """ops-level ref backend == models.attention.sdpa on the ref config
+    (the bit-exactness contract behind the dispatch refactor)."""
+    from repro.kernels.ops import KernelConfig
+    from repro.models.attention import sdpa as model_sdpa
+    kq, kk, kv = jax.random.split(KEY, 3)
+    q = _rand(kq, (2, 8, 4, 64), jnp.float32)
+    k = _rand(kk, (2, 12, 2, 64), jnp.float32)
+    v = _rand(kv, (2, 12, 2, 64), jnp.float32)
+    kvl = jnp.asarray([12, 9], jnp.int32)
+    got = model_sdpa(q, k, v, causal=True, window=6, k_valid_len=kvl,
+                     kernel_config=KernelConfig(backend="ref"))
+    want = ref.grouped_sdpa_ref(q, k, v, causal=True, window=6,
+                                k_valid_len=kvl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -166,8 +166,9 @@ def test_moe_exact_dimensions():
 
 def test_append_free_decode_matches_dus_decode():
     """§Perf A2: the append-free serve step (frozen cache + fresh-token
-    LSE combine) produces the same logits as the DUS cache-write path."""
-    from repro.models import attention as A
+    LSE combine) produces the same logits as the DUS cache-write path —
+    selected by the explicit ``decode_mode`` argument (the mutable
+    ``APPEND_FREE_DECODE`` module global is gone)."""
     cfg = get_config("granite-8b").reduced()
     params = M.init(cfg, KEY, jnp.float32)
     tokens = jax.random.randint(jax.random.fold_in(KEY, 8), (2, 8), 0,
@@ -176,14 +177,23 @@ def test_append_free_decode_matches_dus_decode():
                                   8, jnp.float32)
     tok = tokens[:, 7:8]
     want, _ = M.decode_step(cfg, params, caches, tok, 7)
-    A.APPEND_FREE_DECODE = True
-    try:
-        got, caches2 = M.decode_step(cfg, params, caches, tok, 7)
-    finally:
-        A.APPEND_FREE_DECODE = False
+    got, caches2 = M.decode_step(cfg, params, caches, tok, 7,
+                                 decode_mode="append_free")
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                atol=3e-4, rtol=3e-4)
-    # cache untouched in append-free mode
+    # append-free mode must return the cache bit-identical (no write)
     for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(caches2)):
-        if a.dtype == jnp.float32 and a.ndim == 4:  # k/v leaves
-            pass  # DUS path wrote token 7; append-free must NOT have
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_decode_mode_rejects_unknown():
+    from repro.models import attention as A
+    assert not hasattr(A, "APPEND_FREE_DECODE")
+    cfg = get_config("granite-8b").reduced()
+    params = M.init(cfg, KEY, jnp.float32)
+    _, caches, _ = M.prefill(cfg, params,
+                             {"tokens": jnp.zeros((1, 4), jnp.int32)},
+                             8, jnp.float32)
+    with pytest.raises(ValueError):
+        M.decode_step(cfg, params, caches, jnp.zeros((1, 1), jnp.int32), 4,
+                      decode_mode="nope")
