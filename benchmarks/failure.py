@@ -1,0 +1,149 @@
+"""Accuracy vs failure rate per topology (DESIGN.md Sec. 11).
+
+The fast robustness table: every registered failure behavior — dropout,
+bounded-staleness gossip, churn, Byzantine sign-flip — runs as ONE
+compiled sweep per regime across the paper's finite-time family and the
+exponential-graph baselines, all on the same data and the same shared
+failure trace (common random numbers), so the per-topology accuracy
+columns are a paired comparison.
+
+Deterministic rows gated strictly by benchmarks/report.py in the CI
+robustness lane:
+
+* ``bit_exact`` — the all-clean ``FailureModel()`` sweep must reproduce
+  the synchronous scan engine bit-for-bit (the tentpole invariant);
+* ``ds_ok`` / ``degrades`` — every topology's rounds stay doubly
+  stochastic under the partial-participation re-normalization, and the
+  registry's degrades-gracefully law agrees;
+* ``n_eff`` / ``n_eff_round`` — the effective number of neighbors
+  (Vogels et al.), computed from numpy float64: finite-time schedules
+  score exactly ``n`` over a period.
+
+Accuracy columns are seed-pinned but cross-BLAS-sensitive after ~120
+training steps, so the robustness lane diffs them with a tolerant
+threshold; timings here are wall-clock of whole compiled sweeps and are
+informational only (the suite is in report.py's UNGATED_TIMING_SUITES).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_mlp import MLPConfig
+from repro.core.mixing import is_doubly_stochastic, masked_effective_W
+from repro.data.synthetic import dirichlet_classification
+from repro.models import mlp
+from repro.optim.decentralized import make_method
+from repro.sim import FailureModel
+from repro.sim.sweep import sweep_decentralized
+from repro.topology import TopologySpec, build_schedule
+
+from .common import emit
+from .registry import register
+
+N = 16          # power of two so one_peer_exp is finite-time
+STEPS = 120     # pinned internally: the table must be reproducible
+                # regardless of the runner's --steps
+TOPOS = (("base", 1), ("base", 4), ("one_peer_exp", None), ("exp", None),
+         ("ring", None))
+
+# regime name -> FailureModel; ordered columns of the table
+REGIMES = (
+    ("clean", FailureModel()),
+    ("drop0.1", FailureModel(drop_rate=0.1, seed=11)),
+    ("drop0.3", FailureModel(drop_rate=0.3, seed=11)),
+    ("delay3", FailureModel(delay=3, seed=11)),
+    ("churn0.03", FailureModel(churn_rate=0.03, seed=11)),
+    ("byz_signflip", FailureModel(byzantine_frac=0.125,
+                                  byzantine_mode="sign_flip", seed=11)),
+)
+
+
+@register("failure", fast=True)
+def run() -> dict:
+    cfg = MLPConfig(input_dim=32, hidden=(64,), num_classes=10)
+    data = dirichlet_classification(N, 512, dim=32, num_classes=10,
+                                    alpha=0.3, margin=0.8, seed=2)
+    params = mlp.init(cfg, jax.random.PRNGKey(0))
+    method = make_method("dsgdm")
+
+    def batches(step, bs=32):
+        i = (step * bs) % (512 - bs)
+        return (jnp.asarray(data.node_x[:, i:i + bs]),
+                jnp.asarray(data.node_y[:, i:i + bs]))
+
+    def eval_fn(p):
+        return mlp.accuracy(p, jnp.asarray(data.test_x),
+                            jnp.asarray(data.test_y))
+
+    scheds = [build_schedule(TopologySpec(name=name, n=N, k=k))
+              for name, k in TOPOS]
+
+    def sweep(failure):
+        return sweep_decentralized(
+            loss_fn=mlp.loss_fn, params=params, method=method,
+            schedules=scheds, batches=batches, steps=STEPS, eta=0.05,
+            eval_fn=eval_fn, eval_every=STEPS - 1, failure=failure)
+
+    results: dict = {}
+
+    # --- deterministic topology rows: renormalization + n_eff ----------
+    rng = np.random.default_rng(0)
+    alive = rng.random(N) < 0.75          # one shared survivor mask
+    alive[rng.integers(N)] = True         # never fully dead
+    for sched in scheds:
+        ds_ok = all(
+            is_doubly_stochastic(
+                masked_effective_W(np.asarray(sched.W(r), np.float64),
+                                   alive), atol=1e-9)
+            and is_doubly_stochastic(
+                np.asarray(sched.W(r), np.float64), atol=1e-9)
+            for r in range(max(1, len(sched))))
+        t0 = time.perf_counter()
+        n_eff = sched.effective_neighbors()
+        n_eff_round = sched.effective_neighbors(per_round=True)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"failure/meta/{sched.label}", us,
+             f"ds_ok={int(ds_ok)};degrades={int(sched.degrades_gracefully)};"
+             f"n_eff={n_eff:.6f};n_eff_round={n_eff_round:.6f}",
+             spec=sched.spec)
+        results[f"meta/{sched.label}"] = dict(
+            ds_ok=ds_ok, degrades=sched.degrades_gracefully,
+            n_eff=n_eff, n_eff_round=n_eff_round)
+
+    # --- the accuracy-vs-failure-rate table ----------------------------
+    t0 = time.perf_counter()
+    sync = sweep_decentralized(
+        loss_fn=mlp.loss_fn, params=params, method=method,
+        schedules=scheds, batches=batches, steps=STEPS, eta=0.05,
+        eval_fn=eval_fn, eval_every=STEPS - 1)
+    sync_us = (time.perf_counter() - t0) * 1e6 / STEPS / len(scheds)
+
+    for regime, failure in REGIMES:
+        t0 = time.perf_counter()
+        sw = sweep(failure)
+        us = (time.perf_counter() - t0) * 1e6 / STEPS / len(scheds)
+        for c, sched in enumerate(scheds):
+            res = sw.run(c)
+            derived = (f"acc={res.test_acc[-1]:.4f};"
+                       f"loss={res.losses[-1]:.4f};"
+                       f"clock_min={int(res.clocks.min())};"
+                       f"clock_max={int(res.clocks.max())}")
+            if regime == "clean":
+                # the tentpole invariant: all-clean == synchronous,
+                # bit for bit — emitted as a hard 0/1 gated metric
+                ref = sync.run(c)
+                exact = (np.array_equal(res.losses, ref.losses)
+                         and np.array_equal(res.test_acc, ref.test_acc)
+                         and np.array_equal(res.consensus, ref.consensus))
+                derived += f";bit_exact={int(exact)}"
+                us = sync_us  # clean regime's own wall time ~= sync's
+            emit(f"failure/{regime}/{sched.label}", us, derived,
+                 spec=sched.spec)
+            results[f"{regime}/{sched.label}"] = float(res.test_acc[-1])
+
+    assert all(results[f"clean/{s.label}"] >= 0.5 for s in scheds)
+    return results

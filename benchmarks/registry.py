@@ -43,10 +43,11 @@ SCHEMA_VERSION = 1
 # suite modules imported by load_all(); each registers itself on import
 SUITE_MODULES = ("consensus", "length", "comm_cost", "dsgd_hetero",
                  "robust_methods", "precision", "roofline", "kernels",
-                 "serving")
+                 "serving", "failure")
 
 # the cheap, deterministic suites CI runs on every PR
-FAST_SUITES = ("consensus", "length", "comm_cost", "kernels", "serving")
+FAST_SUITES = ("consensus", "length", "comm_cost", "kernels", "serving",
+               "failure")
 
 
 @dataclass(frozen=True)

@@ -54,7 +54,7 @@ def run(n: int = 25, steps: int = 300, alpha: float = 0.1) -> dict:
         for c, (name, k) in enumerate(TOPOS):
             res = sw.run(c)
             label = (f"robust/{method_name}/{name}"
-                     + (f"-k{k}" if k else ""))
+                     + (f"-k{k}" if k is not None else ""))
             emit(label, us,
                  f"acc={res.test_acc[-1]:.4f};"
                  f"consensus={res.consensus[-1]:.3e}", spec=scheds[c].spec)

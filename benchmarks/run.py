@@ -20,6 +20,7 @@ Suites:
     robust_methods — paper Fig. 9 (D^2 / QG-DSGDm / GT)
     precision      — finite-time exactness under f64/f32/bf16
     roofline       — §Roofline table from the dry-run artifacts
+    failure        — accuracy vs failure rate per topology (Sec. 11)
 """
 from __future__ import annotations
 

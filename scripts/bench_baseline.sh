@@ -8,11 +8,12 @@
 #
 #     bash scripts/bench_baseline.sh [suites]
 #
-# Default suites are the fast CI lane (consensus,length,comm_cost,kernels,serving).
+# Default suites are the fast CI lane
+# (consensus,length,comm_cost,kernels,serving,failure).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-SUITES="${1:-consensus,length,comm_cost,kernels,serving}"
+SUITES="${1:-consensus,length,comm_cost,kernels,serving,failure}"
 STEPS=300
 OUT=benchmarks/baselines
 

@@ -17,7 +17,14 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
-        flat[key] = np.asarray(leaf)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":
+            # extended dtypes (bfloat16, float8, ...) survive np.savez
+            # but np.load hands back a raw void view with no cast
+            # available — store the bit pattern as a same-width uint and
+            # view it back against the template dtype on restore
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        flat[key] = arr
     return flat
 
 
@@ -44,5 +51,9 @@ def load_pytree(template, directory: str, name: str = "ckpt"):
                        for p in pth)
         arr = data[key]
         assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        want = np.dtype(leaf.dtype)
+        if want.kind == "V" and arr.dtype != want \
+                and arr.dtype.itemsize == want.itemsize:
+            arr = arr.view(want)   # bit-pattern restore (see _flatten)
         leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(flat_t[1], leaves)

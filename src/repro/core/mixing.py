@@ -68,3 +68,63 @@ def spectral_consensus_rate(W: np.ndarray) -> float:
     n = W.shape[0]
     M = W - np.full((n, n), 1.0 / n)
     return float(np.linalg.svd(M, compute_uv=False)[0])
+
+
+# ---------------------------------------------------------------------------
+# failure-realistic rounds: effective mixing over surviving nodes
+# ---------------------------------------------------------------------------
+
+def masked_effective_W(W: np.ndarray, alive: np.ndarray) -> np.ndarray:
+    """Re-normalize one round's matrix for a partial-participation round
+    so it stays EXACTLY doubly stochastic over the whole node set, with
+    every dead node isolated on the identity (numpy reference; the
+    trace-safe jnp twin lives in :mod:`repro.sim.failure` and is pinned
+    bit-comparable by tests/test_failure.py).
+
+    Rule (DESIGN.md Sec. 11): zero every edge touching a dead node, put
+    dead nodes on the identity, absorb the elementwise-matched part of
+    the lost row/column mass onto the survivors' diagonals (the classic
+    rule — exact on its own for symmetric rounds), and route the
+    asymmetric residual through the rank-one coupling
+    ``outer(r, c) / sum(r)`` between row-deficit and column-deficit
+    survivors (row and column deficits always total the same lost mass
+    for a doubly stochastic ``W``, so the repair is exact for directed
+    rounds too).  With all nodes alive the input is returned unchanged.
+    """
+    a = np.asarray(alive, dtype=W.dtype)
+    if a.all():
+        return W
+    Weff = W * a[:, None] * a[None, :] + np.diag(1.0 - a)
+    r = a * (1.0 - Weff.sum(axis=1))      # per-survivor row deficit
+    c = a * (1.0 - Weff.sum(axis=0))      # per-survivor column deficit
+    d = np.minimum(r, c)
+    Weff = Weff + np.diag(d)
+    r, c = r - d, c - d                   # disjoint supports after d
+    s = r.sum()
+    if s > 1e-12:
+        Weff = Weff + np.outer(r, c) / s
+    return Weff
+
+
+def effective_neighbors_matrix(W: np.ndarray) -> float:
+    """Effective number of neighbors of one mixing matrix (Vogels et
+    al., "Beyond spectral gap"): averaging iid unit-variance noise with
+    row i leaves variance ``||W[i, :]||^2``, i.e. node i effectively
+    averaged over ``1 / ||W[i, :]||^2`` peers.  Aggregated over nodes as
+    ``n / ||W||_F^2`` (the harmonic mean of the per-node counts):
+    uniform averaging over m peers scores m; the identity scores 1; the
+    complete graph scores n."""
+    n = W.shape[0]
+    return float(n / max((np.asarray(W, np.float64) ** 2).sum(), 1e-300))
+
+
+def effective_neighbors(sched: TopologySchedule, *,
+                        per_round: bool = False) -> float:
+    """Schedule-level effective number of neighbors: the metric of the
+    full-period product (finite-time schedules score exactly ``n``), or
+    with ``per_round=True`` the mean single-round metric (what one
+    unreliable round buys)."""
+    if per_round:
+        return float(np.mean([effective_neighbors_matrix(W)
+                              for W in sched.Ws]))
+    return effective_neighbors_matrix(schedule_product(sched))

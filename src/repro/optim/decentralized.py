@@ -57,6 +57,12 @@ class Method:
     # (sim.engine.compiled_scan_run, sim.sweep.compiled_sweep_run, the
     # dist.steps jits) is keyed on the backend too.
     kernel_config: KernelConfig | None = None
+    # How many times ``step`` invokes its mixer per call.  The
+    # failure-realistic engine (repro.sim.failure) intercepts the
+    # gossiped tree through the mixer, which only composes with
+    # single-mix methods — gradient tracking declares 2 and is rejected
+    # up front for delay/Byzantine regimes (DESIGN.md Sec. 11).
+    mixes_per_step: int = 1
 
 
 def _as_mixer(w_or_fn) -> Callable:
@@ -217,7 +223,7 @@ def GradientTracking() -> Method:
         new = mixer(jax.tree.map(lambda x, yy: x - eta * yy, params_n, y))
         return new, {"y": y, "g_prev": grads_n}
 
-    return Method("gt", init, step)
+    return Method("gt", init, step, mixes_per_step=2)
 
 
 METHOD_NAMES = ("dsgd", "dsgdm", "qg-dsgdm", "d2", "gt")

@@ -1,3 +1,5 @@
-from .engine import (SimResult, eval_mask, materialize_schedule, node_stack,
+from .engine import (SimResult, check_failure_method, eval_mask,
+                     materialize_schedule, node_stack,
                      simulate_decentralized, stack_batches)
+from .failure import BYZANTINE_MODES, FailureModel
 from .sweep import SweepResult, stack_schedules, sweep_decentralized

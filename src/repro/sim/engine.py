@@ -42,6 +42,10 @@ from repro.core.graphs import TopologySchedule
 from repro.optim.decentralized import Method
 from repro.topology import Schedule, TopologySpec, as_schedule
 
+from .failure import (FailureModel, corrupt_visible, effective_W,
+                      init_history, participation_mask, select_nodes,
+                      stale_visible, write_history)
+
 
 @dataclass
 class SimResult:
@@ -49,6 +53,9 @@ class SimResult:
     test_acc: np.ndarray        # (evals,) accuracy of the averaged model
     consensus: np.ndarray       # (evals,) mean param variance across nodes
     eval_steps: np.ndarray
+    # final per-node virtual clocks (failure-model runs only): how many
+    # rounds each node actually participated in
+    clocks: np.ndarray | None = None
 
 
 def _consensus_error(params_n) -> jnp.ndarray:
@@ -132,6 +139,22 @@ def _make_eval_step(eval_fn):
     return eval_step
 
 
+def _make_eval_step_honest(eval_fn, honest: np.ndarray):
+    """Byzantine runs: the averaged model and the consensus error are
+    computed over the honest subset only — the liars' own parameters are
+    not part of the reproduction's metrics."""
+    idx = np.nonzero(honest)[0]
+
+    def eval_step(params_n):
+        sub = jax.tree.map(lambda x: x[idx], params_n)
+        avg = jax.tree.map(lambda x: x.mean(axis=0), sub)
+        acc = eval_fn(avg) if eval_fn is not None else 0.0
+        return (jnp.asarray(acc, jnp.float32),
+                jnp.asarray(_consensus_error(sub), jnp.float32))
+
+    return eval_step
+
+
 def _scan_run(params_n, Ws, idx, mask, batches_st, *,
               loss_fn, method: Method, eta: float, eval_fn):
     """One full training run as a single ``lax.scan``.
@@ -182,6 +205,168 @@ def compiled_scan_run(loss_fn, method: Method, eta: float, eval_fn,
 
 
 # ---------------------------------------------------------------------------
+# failure-realistic backend (DESIGN.md Sec. 11)
+# ---------------------------------------------------------------------------
+
+def check_failure_method(failure: FailureModel, method: Method) -> None:
+    """Delay / Byzantine regimes intercept the gossiped values via a
+    mixer closure, which only composes with methods that mix exactly
+    once per step (gradient tracking mixes twice — its tracker would
+    need its own staleness history)."""
+    if failure.needs_mixer_closure and method.mixes_per_step != 1:
+        raise ValueError(
+            f"failure model with delay/Byzantine behaviors requires a "
+            f"method that mixes once per step; {method.name!r} declares "
+            f"mixes_per_step={method.mixes_per_step}")
+
+
+def _scan_run_failure(params_n, Ws, idx, mask, batches_st, ts, *,
+                      loss_fn, method: Method, eta: float, eval_fn,
+                      failure: FailureModel):
+    """One failure-realistic run as a single ``lax.scan``.
+
+    Mirrors :func:`_scan_run` with extra scan carry: per-node virtual
+    clocks (int rounds participated), and — when ``failure.delay > 0``
+    — the circular history buffer backing the bounded-staleness
+    parameter model.  Every fault feature is gated STATICALLY on the
+    frozen model's knobs, so a knob at zero contributes no ops and the
+    all-clean model traces to the synchronous program (bit-exact,
+    pinned by tests/test_failure.py).  Returns per-step
+    ``(losses, accs, cons)`` plus the final clocks.
+    """
+    n = int(jax.tree.leaves(params_n)[0].shape[0])
+    vgrad = jax.vmap(jax.value_and_grad(loss_fn))
+    state0 = method.init(params_n)
+    base_key = jax.random.PRNGKey(failure.seed)
+    stragglers = failure.straggler_mask(n)
+    byz = failure.byzantine_mask(n)
+    honest = ~byz
+    if failure.has_byzantine:
+        eval_step = _make_eval_step_honest(eval_fn, honest)
+    else:
+        eval_step = _make_eval_step(eval_fn)
+    zero = (jnp.float32(0.0), jnp.float32(0.0))
+    hist0 = init_history(params_n, failure.delay) if failure.has_delay \
+        else ()
+    clock0 = jnp.zeros(n, jnp.int32)
+
+    def make_mixer(W, hist, slot, k_byz, capture):
+        """Closure handed to the method in place of the dense matrix:
+        intercepts the gossiped tree (for the history write), swaps in
+        stale / corrupted neighbor values, and applies the mix with the
+        self-weight on the node's own CURRENT contribution."""
+        Wt = W.astype(jnp.float32)
+        Wd = jnp.diagonal(Wt)
+        Woff = Wt - jnp.diag(Wd)
+
+        def mixer(tree):
+            if "tree" in capture:   # trace-time guard, see check above
+                raise RuntimeError(
+                    f"method {method.name!r} mixed more than once per "
+                    f"step; unsupported under delay/Byzantine failure")
+            capture["tree"] = tree
+            V = tree
+            if failure.has_delay:
+                V = stale_visible(tree, hist, slot)
+            if failure.has_byzantine:
+                V = corrupt_visible(failure, k_byz, V, byz)
+
+            def per_leaf(x, v):
+                out = jnp.tensordot(Woff, v.astype(jnp.float32),
+                                    axes=([1], [0]))
+                out = out + Wd.reshape((-1,) + (1,) * (x.ndim - 1)) \
+                    * x.astype(jnp.float32)
+                return out.astype(x.dtype)
+
+            return jax.tree.map(per_leaf, tree, V)
+
+        return mixer
+
+    def body(carry, xs):
+        params_n, state, hist, clock = carry
+        i, m, t, batch = xs
+        key = jax.random.fold_in(base_key, t)
+
+        # churn: the replacement restarts from the departed node's
+        # parameter checkpoint — fresh optimizer state, clock reset
+        if failure.has_churn:
+            churned = jax.random.bernoulli(
+                jax.random.fold_in(key, 0), failure.churn_rate, (n,))
+            state = select_nodes(churned, method.init(params_n), state)
+            clock = jnp.where(churned, 0, clock)
+
+        if failure.has_drop:
+            active = participation_mask(
+                failure, jax.random.fold_in(key, 1), t, n, stragglers)
+        else:
+            active = None
+
+        losses, grads = vgrad(params_n, batch)
+        if active is not None:
+            # an offline node neither computes nor communicates: zero
+            # its gradient (x - eta*0 == x exactly) and isolate it on
+            # the identity row/column of the re-normalized matrix
+            grads = jax.tree.map(
+                lambda g: jnp.where(
+                    active.reshape((-1,) + (1,) * (g.ndim - 1)), g, 0.0),
+                grads)
+            W = effective_W(Ws[i], active)
+        else:
+            W = Ws[i]
+
+        capture: dict = {}
+        if failure.needs_mixer_closure:
+            if failure.has_delay:
+                tau = jax.random.randint(
+                    jax.random.fold_in(key, 2), (n,), 0, failure.delay + 1)
+                slot = jnp.where(tau == 0, -1, (t - tau) % failure.delay)
+            else:
+                slot = None
+            w_arg = make_mixer(W, hist, slot,
+                               jax.random.fold_in(key, 3), capture)
+        else:
+            w_arg = W
+
+        new_params, new_state = method.step(params_n, grads, state, w_arg,
+                                            eta)
+        if active is not None:
+            # offline nodes' optimizer state is frozen, not decayed
+            new_state = select_nodes(active, new_state, state)
+            clock = clock + active.astype(jnp.int32)
+        else:
+            clock = clock + 1
+        if failure.has_delay:
+            hist = write_history(hist, capture["tree"],
+                                 t % failure.delay)
+
+        loss = losses[np.nonzero(honest)[0]].mean() \
+            if failure.has_byzantine else losses.mean()
+        if eval_fn is None:
+            acc, cons = zero
+        else:
+            acc, cons = jax.lax.cond(m, eval_step, lambda _: zero,
+                                     new_params)
+        return (new_params, new_state, hist, clock), (loss, acc, cons)
+
+    (_, _, _, clocks), (losses, accs, cons) = jax.lax.scan(
+        body, (params_n, state0, hist0, clock0),
+        (idx, mask, ts, batches_st))
+    return losses, accs, cons, clocks
+
+
+@lru_cache(maxsize=8)
+def compiled_failure_run(loss_fn, method: Method, eta: float, eval_fn,
+                         failure: FailureModel, kernel_config=None):
+    """Memoized jitted failure-realistic runner — same keying rationale
+    as :func:`compiled_scan_run`, with the frozen ``FailureModel`` in
+    the key so two regimes never share an executable."""
+    del kernel_config  # cache key only; the method's step already baked it in
+    return jax.jit(partial(_scan_run_failure, loss_fn=loss_fn,
+                           method=method, eta=eta, eval_fn=eval_fn,
+                           failure=failure), donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
 # public entry point
 # ---------------------------------------------------------------------------
 
@@ -191,10 +376,21 @@ def simulate_decentralized(
         batches: Callable, steps: int,
         eta: float, eval_fn: Callable | None = None,
         eval_every: int = 50, same_init: bool = True,
-        key=None, backend: str = "scan") -> SimResult:
-    """batches(step) -> per-node batch pytree with leading axis n."""
+        key=None, backend: str = "scan",
+        failure: FailureModel | None = None) -> SimResult:
+    """batches(step) -> per-node batch pytree with leading axis n.
+
+    ``failure`` selects the failure-realistic backend (delayed gossip,
+    dropout/stragglers, churn, Byzantine nodes — DESIGN.md Sec. 11);
+    only the scan backend supports it.  An all-clean ``FailureModel()``
+    is bit-exact with ``failure=None``.
+    """
     if backend not in ("scan", "loop"):
         raise ValueError(f"unknown backend {backend!r}")
+    if failure is not None and backend != "scan":
+        raise ValueError("failure models require the scan backend")
+    if failure is not None:
+        check_failure_method(failure, method)
     schedule = as_schedule(schedule)
     if steps <= 0:   # degenerate, matches the historical loop behaviour
         return SimResult(np.asarray([], np.float32),
@@ -211,18 +407,29 @@ def simulate_decentralized(
     Ws, idx = materialize_schedule(schedule, steps)
     mask_np = eval_mask(steps, eval_every)
     batches_st = stack_batches(batches, steps)
-    run = compiled_scan_run(loss_fn, method, eta, eval_fn,
-                            method.kernel_config)
-    with donation_fallback_ok():
-        losses, accs, cons = run(params_n, Ws, idx, jnp.asarray(mask_np),
-                                 batches_st)
+    clocks = None
+    if failure is None:
+        run = compiled_scan_run(loss_fn, method, eta, eval_fn,
+                                method.kernel_config)
+        with donation_fallback_ok():
+            losses, accs, cons = run(params_n, Ws, idx,
+                                     jnp.asarray(mask_np), batches_st)
+    else:
+        run = compiled_failure_run(loss_fn, method, eta, eval_fn,
+                                   failure, method.kernel_config)
+        ts = jnp.arange(steps, dtype=jnp.int32)
+        with donation_fallback_ok():
+            losses, accs, cons, clocks = run(
+                params_n, Ws, idx, jnp.asarray(mask_np), batches_st, ts)
+        clocks = np.asarray(clocks)
     losses = np.asarray(losses)
     if eval_fn is None:
         return SimResult(losses, np.asarray([], np.float32),
                          np.asarray([], np.float32),
-                         np.asarray([], np.int64))
+                         np.asarray([], np.int64), clocks)
     return SimResult(losses, np.asarray(accs)[mask_np],
-                     np.asarray(cons)[mask_np], np.nonzero(mask_np)[0])
+                     np.asarray(cons)[mask_np], np.nonzero(mask_np)[0],
+                     clocks)
 
 
 def _simulate_loop(loss_fn, params_n, method, schedule, batches, steps,

@@ -1,0 +1,227 @@
+"""Failure-realistic rounds for the simulation engine (DESIGN.md Sec. 11).
+
+The paper proves exact finite-time consensus for synchronous,
+failure-free rounds; production fleets never live there.  This module
+defines the :class:`FailureModel` — a frozen, hashable description of
+how rounds deviate from the idealized mixing model — plus the
+trace-safe building blocks the scan engine composes into its
+``lax.scan`` body:
+
+* **dropout / stragglers** — per-round node participation masks; the
+  round's matrix is re-normalized on the fly (:func:`effective_W`) so
+  it stays exactly doubly stochastic over survivors while dead nodes
+  idle on the identity;
+* **delayed (asynchronous) gossip** — a bounded-staleness parameter
+  model: neighbors read a snapshot up to ``delay`` rounds old from a
+  circular history buffer carried through the scan;
+* **churn** — per-round node replacement: the newcomer restarts from
+  the departed node's parameter checkpoint with freshly initialized
+  optimizer state and a reset virtual clock;
+* **Byzantine nodes** — a persistent subset broadcasts corrupted
+  values (``sign_flip`` / ``random`` / ``all_same``) instead of its
+  half-step; honest-node metrics exclude them.
+
+Every knob is static configuration: a feature whose knob is zero
+contributes NO code to the traced program, so the all-clean model is
+bit-exact with the synchronous engine by construction (pinned by
+tests/test_failure.py).  All randomness is derived from
+``FailureModel.seed`` (``jax.random.fold_in`` per absolute step for
+in-graph draws; a numpy generator at trace time for the persistent
+straggler/Byzantine sets), so a failure trace is reproducible and —
+under the sweep layer's vmap — shared across configs as common random
+numbers for paired topology comparisons.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BYZANTINE_MODES = ("none", "sign_flip", "random", "all_same")
+
+
+@dataclass(frozen=True)
+class FailureModel:
+    """Frozen description of one failure regime.
+
+    Hashable on purpose: it rides in the jit-runner memo keys
+    (``compiled_failure_run`` / ``compiled_failure_sweep``) exactly like
+    the method's ``KernelConfig``, so two regimes can never share a
+    traced executable.
+    """
+    delay: int = 0               # max gossip staleness, in rounds
+    drop_rate: float = 0.0       # per-node per-round dropout probability
+    straggler_rate: float = 0.0  # fraction of persistently slow nodes
+    straggler_period: int = 4    # stragglers participate 1-in-period rounds
+    churn_rate: float = 0.0      # per-node per-round replacement probability
+    byzantine_frac: float = 0.0  # fraction of persistently Byzantine nodes
+    byzantine_mode: str = "none"  # sign_flip | random | all_same
+    byzantine_scale: float = 1.0  # amplitude of the random/all_same attacks
+    seed: int = 0
+
+    def __post_init__(self):
+        if not isinstance(self.delay, int) or self.delay < 0:
+            raise ValueError(f"delay must be an int >= 0, got {self.delay!r}")
+        for name in ("drop_rate", "straggler_rate", "churn_rate",
+                     "byzantine_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= float(v) < 1.0:
+                raise ValueError(f"{name} must be in [0, 1), got {v!r}")
+        if self.straggler_period < 2:
+            raise ValueError("straggler_period must be >= 2")
+        if self.byzantine_mode not in BYZANTINE_MODES:
+            raise ValueError(f"byzantine_mode must be one of "
+                             f"{BYZANTINE_MODES}, got {self.byzantine_mode!r}")
+        if self.byzantine_frac > 0.0 and self.byzantine_mode == "none":
+            raise ValueError("byzantine_frac > 0 requires a byzantine_mode")
+
+    # static feature flags — python bools, read at trace time so disabled
+    # features are absent from the compiled program entirely
+    @property
+    def has_drop(self) -> bool:
+        return self.drop_rate > 0.0 or self.straggler_rate > 0.0
+
+    @property
+    def has_delay(self) -> bool:
+        return self.delay > 0
+
+    @property
+    def has_churn(self) -> bool:
+        return self.churn_rate > 0.0
+
+    @property
+    def has_byzantine(self) -> bool:
+        return self.byzantine_frac > 0.0 and self.byzantine_mode != "none"
+
+    @property
+    def is_clean(self) -> bool:
+        return not (self.has_drop or self.has_delay or self.has_churn
+                    or self.has_byzantine)
+
+    @property
+    def needs_mixer_closure(self) -> bool:
+        """Delay and Byzantine behaviors intercept the values neighbors
+        *receive*, which requires the engine to wrap the method's mix in
+        a closure (and hence a method that mixes exactly once/step)."""
+        return self.has_delay or self.has_byzantine
+
+    # persistent node sets, drawn once from the model's seed ------------
+
+    def straggler_mask(self, n: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, 1))
+        return rng.random(n) < self.straggler_rate
+
+    def byzantine_mask(self, n: int) -> np.ndarray:
+        if not self.has_byzantine:
+            return np.zeros(n, bool)
+        rng = np.random.default_rng((self.seed, 2))
+        mask = rng.random(n) < self.byzantine_frac
+        if not mask.any():                 # frac > 0 means at least one
+            mask[int(rng.integers(n))] = True
+        return mask
+
+
+# ---------------------------------------------------------------------------
+# trace-safe building blocks (composed by repro.sim.engine)
+# ---------------------------------------------------------------------------
+
+def effective_W(W, alive):
+    """jnp twin of :func:`repro.core.mixing.masked_effective_W` — same
+    re-normalization rule, trace-safe (no data-dependent control flow).
+    With ``alive`` all ones it reduces to ``W`` up to exact float ops
+    (multiply by 1.0, add 0.0); the engine skips the call entirely on
+    the clean path."""
+    a = alive.astype(W.dtype)
+    Weff = W * a[:, None] * a[None, :] + jnp.diag(1.0 - a)
+    r = a * (1.0 - Weff.sum(axis=1))
+    c = a * (1.0 - Weff.sum(axis=0))
+    d = jnp.minimum(r, c)
+    Weff = Weff + jnp.diag(d)
+    r = r - d
+    c = c - d
+    s = r.sum()
+    scale = jnp.where(s > 1e-12, 1.0 / jnp.where(s > 1e-12, s, 1.0), 0.0)
+    return Weff + scale * jnp.outer(r, c)
+
+
+def participation_mask(failure: FailureModel, key, t, n: int,
+                       stragglers: np.ndarray):
+    """(n,) bool: which nodes take part in round ``t``.  Dropout is an
+    iid Bernoulli draw per (round, node); a persistent straggler
+    additionally participates only on its own 1-in-period phase
+    (phases staggered by node id so stragglers never synchronize)."""
+    active = jnp.ones(n, bool)
+    if failure.drop_rate > 0.0:
+        active = jax.random.bernoulli(key, 1.0 - failure.drop_rate, (n,))
+    if failure.straggler_rate > 0.0:
+        p = failure.straggler_period
+        phase = jnp.asarray(np.arange(n) % p)
+        slow_ok = (t % p) == phase
+        active = active & (slow_ok | ~jnp.asarray(stragglers))
+    return active
+
+
+def corrupt_visible(failure: FailureModel, key, tree, byz: np.ndarray):
+    """Apply the Byzantine behavior to the values the byz nodes
+    broadcast.  ``tree`` is node-stacked; ``byz`` is the static (n,)
+    membership mask.  Honest nodes' entries pass through untouched."""
+    mode, scale = failure.byzantine_mode, failure.byzantine_scale
+    byz_b = jnp.asarray(byz)
+
+    def per_leaf(i, x):
+        m = byz_b.reshape((-1,) + (1,) * (x.ndim - 1))
+        kl = jax.random.fold_in(key, i)
+        if mode == "sign_flip":
+            return jnp.where(m, -x, x)
+        if mode == "random":        # independent noise per byz node
+            noise = scale * jax.random.normal(kl, x.shape, x.dtype)
+            return jnp.where(m, noise, x)
+        # all_same: every byz node colludes on ONE shared vector
+        noise = scale * jax.random.normal(kl, x.shape[1:], x.dtype)
+        return jnp.where(m, jnp.broadcast_to(noise, x.shape), x)
+
+    leaves, tdef = jax.tree.flatten(tree)
+    return jax.tree.unflatten(
+        tdef, [per_leaf(i, x) for i, x in enumerate(leaves)])
+
+
+def stale_visible(tree, hist, slot):
+    """Bounded-staleness read: for each node j, the value neighbors see
+    is either j's current contribution (``slot[j] < 0``) or its entry in
+    history ring slot ``slot[j]``."""
+    fresh = slot < 0
+
+    def per_leaf(x, h):
+        idx = jnp.where(fresh, 0, slot).reshape(
+            (1, -1) + (1,) * (x.ndim - 1))
+        old = jnp.take_along_axis(h, idx, axis=0)[0]
+        return jnp.where(fresh.reshape((-1,) + (1,) * (x.ndim - 1)),
+                         x, old)
+
+    return jax.tree.map(per_leaf, tree, hist)
+
+
+def write_history(hist, tree, slot: int | jnp.ndarray):
+    """Write this round's gossiped tree into ring slot ``slot``."""
+    return jax.tree.map(
+        lambda h, x: jax.lax.dynamic_update_index_in_dim(h, x, slot, 0),
+        hist, tree)
+
+
+def init_history(params_n, delay: int):
+    """(delay, n, ...) ring buffer primed with the initial parameters —
+    before real history exists, maximally stale reads see the init."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (delay,) + x.shape) + 0.0,
+        params_n)
+
+
+def select_nodes(mask, new_tree, old_tree):
+    """Per-node select on every leaf's leading axis: ``mask`` True takes
+    ``new_tree``."""
+    return jax.tree.map(
+        lambda nw, od: jnp.where(
+            mask.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, od),
+        new_tree, old_tree)

@@ -34,7 +34,10 @@ from repro.optim.decentralized import Method
 from repro.topology import Schedule, TopologySpec, as_schedule
 
 from . import engine
-from .engine import SimResult, _scan_run, eval_mask, node_stack, stack_batches
+from .engine import (SimResult, _scan_run, _scan_run_failure,
+                     check_failure_method, eval_mask, node_stack,
+                     stack_batches)
+from .failure import FailureModel
 
 
 @dataclass
@@ -45,12 +48,15 @@ class SweepResult:
     test_acc: np.ndarray        # (C, S, evals)
     consensus: np.ndarray       # (C, S, evals)
     eval_steps: np.ndarray      # (evals,)
+    clocks: np.ndarray | None = None   # (C, S, n) failure-model runs only
 
     def run(self, config: int, seed: int = 0) -> SimResult:
         """A single (config, seed) cell, as a plain SimResult."""
         return SimResult(self.losses[config, seed],
                          self.test_acc[config, seed],
-                         self.consensus[config, seed], self.eval_steps)
+                         self.consensus[config, seed], self.eval_steps,
+                         None if self.clocks is None
+                         else self.clocks[config, seed])
 
 
 def stack_schedules(
@@ -88,19 +94,40 @@ def compiled_sweep_run(loss_fn, method: Method, eta: float, eval_fn,
     return jax.jit(over_cfgs, donate_argnums=(0,))
 
 
+@lru_cache(maxsize=8)
+def compiled_failure_sweep(loss_fn, method: Method, eta: float, eval_fn,
+                           failure: FailureModel, kernel_config=None):
+    """Memoized jitted configs x seeds failure-realistic runner.  The
+    failure PRNG is seeded from the frozen model and folded per absolute
+    step, so every vmapped cell sees the SAME failure trace — common
+    random numbers, the paired comparison a topology-vs-topology
+    robustness figure wants (vary ``failure.seed`` for replications)."""
+    del kernel_config  # cache key only; the method's step already baked it in
+    run1 = partial(_scan_run_failure, loss_fn=loss_fn, method=method,
+                   eta=eta, eval_fn=eval_fn, failure=failure)
+    over_seeds = jax.vmap(run1, in_axes=(0, None, None, None, None, None))
+    over_cfgs = jax.vmap(over_seeds,
+                         in_axes=(None, 0, 0, None, None, None))
+    return jax.jit(over_cfgs, donate_argnums=(0,))
+
+
 def sweep_decentralized(
         *, loss_fn: Callable, params, method: Method,
         schedules: Sequence[TopologySpec | Schedule | TopologySchedule],
         batches: Callable,
         steps: int, eta: float, eval_fn: Callable | None = None,
-        eval_every: int = 50) -> SweepResult:
+        eval_every: int = 50,
+        failure: FailureModel | None = None) -> SweepResult:
     """Run ``len(schedules) x n_seeds`` independent simulations as one
     compiled computation.
 
     ``params`` is either a single pytree (one seed) or a list/tuple of
     pytrees (one per seed; e.g. ``[init(cfg, key_s) for key_s in keys]``).
-    Results match per-cell ``simulate_decentralized`` runs.
+    Results match per-cell ``simulate_decentralized`` runs, including
+    under a ``failure`` model (same model per cell, shared trace).
     """
+    if failure is not None:
+        check_failure_method(failure, method)
     schedules = [as_schedule(s) for s in schedules]
     params_list = list(params) if isinstance(params, (list, tuple)) \
         else [params]
@@ -119,18 +146,28 @@ def sweep_decentralized(
     mask_np = eval_mask(steps, eval_every)
     batches_st = stack_batches(batches, steps)
 
-    run = compiled_sweep_run(loss_fn, method, eta, eval_fn,
-                             method.kernel_config)
-    with engine.donation_fallback_ok():
-        losses, accs, cons = run(P, Ws, idx, jnp.asarray(mask_np),
-                                 batches_st)
+    clocks = None
+    if failure is None:
+        run = compiled_sweep_run(loss_fn, method, eta, eval_fn,
+                                 method.kernel_config)
+        with engine.donation_fallback_ok():
+            losses, accs, cons = run(P, Ws, idx, jnp.asarray(mask_np),
+                                     batches_st)
+    else:
+        run = compiled_failure_sweep(loss_fn, method, eta, eval_fn,
+                                     failure, method.kernel_config)
+        ts = jnp.arange(steps, dtype=jnp.int32)
+        with engine.donation_fallback_ok():
+            losses, accs, cons, clocks = run(
+                P, Ws, idx, jnp.asarray(mask_np), batches_st, ts)
+        clocks = np.asarray(clocks)
 
     losses = np.asarray(losses)
     names = [s.label for s in schedules]
     if eval_fn is None:
         empty = np.zeros(losses.shape[:2] + (0,), np.float32)
         return SweepResult(names, losses, empty, empty.copy(),
-                           np.asarray([], np.int64))
+                           np.asarray([], np.int64), clocks)
     return SweepResult(names, losses, np.asarray(accs)[..., mask_np],
                        np.asarray(cons)[..., mask_np],
-                       np.nonzero(mask_np)[0])
+                       np.nonzero(mask_np)[0], clocks)

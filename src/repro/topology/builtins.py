@@ -16,6 +16,16 @@ Metadata conventions:
   dense exponential graph iff its offsets cover every non-zero shift
   (tiny ``n``), D-EquiStatic iff the random offsets necessarily exhaust
   all shifts (``n <= k + 1``).
+* ``degrades_gracefully`` is left at its registry default (True) for
+  every builtin: all rounds shipped here are exactly doubly stochastic,
+  which is precisely the invariant the failure model's
+  partial-participation re-normalization needs (exact even for the
+  DIRECTED rounds — exp / D-EquiStatic — via the rank-one residual
+  rule, see repro.core.mixing.masked_effective_W).  The registry-wide
+  conformance suite (tests/test_topology_registry.py) checks the claim
+  against sampled survivor masks for every registration, so a future
+  topology whose rounds break the invariant must register
+  ``degrades_gracefully=False`` or fail conformance.
 """
 from __future__ import annotations
 

@@ -13,7 +13,13 @@ Each topology registers once with :func:`register_topology`, declaring:
 * ``max_degree(spec)`` — the metadata law: an upper bound on the
   schedule's maximum degree (tight for the static families);
 * ``valid_n(spec)`` — the ``n`` constraint (e.g. smoothness for the
-  k-peer hyper-hypercube, powers of two for the 1-peer hypercube).
+  k-peer hyper-hypercube, powers of two for the 1-peer hypercube);
+* ``degrades_gracefully(spec)`` — whether every round of the schedule,
+  re-normalized over any surviving-node subset by the failure model's
+  rule (:func:`repro.core.mixing.masked_effective_W`), remains exactly
+  doubly stochastic with dead nodes isolated on the identity — i.e.
+  the topology stays a valid mixer under partial participation
+  (DESIGN.md Sec. 11).
 
 Consumers never dispatch on names: they call ``canonicalize`` +
 ``Registration.build`` via :func:`repro.topology.build_schedule`, so a
@@ -43,6 +49,7 @@ class Registration:
     finite_time: Callable[[TopologySpec], bool]
     max_degree: Callable[[TopologySpec], int]
     valid_n: Callable[[TopologySpec], bool]
+    degrades_gracefully: Callable[[TopologySpec], bool]
     extra_params: dict            # name -> default value
     aliases: tuple[str, ...]
     description: str
@@ -67,11 +74,16 @@ def register_topology(name: str, *, aliases: tuple[str, ...] = (),
                       default_k: Callable[[int], int] | None = None,
                       finite_time, max_degree,
                       valid_n: Callable[[TopologySpec], bool] | None = None,
+                      degrades_gracefully=True,
                       extra_params: dict | None = None,
                       description: str = ""):
     """Decorator: register ``fn(spec) -> TopologySchedule`` under
-    ``name`` (+ aliases) with its metadata laws.  ``finite_time`` and
-    ``max_degree`` may be constants or callables of the canonical spec."""
+    ``name`` (+ aliases) with its metadata laws.  ``finite_time``,
+    ``max_degree`` and ``degrades_gracefully`` may be constants or
+    callables of the canonical spec.  ``degrades_gracefully`` defaults
+    to True: the renormalization rule is exact for every doubly
+    stochastic round, so only a topology that ships rounds violating
+    that invariant should opt out."""
     def deco(fn):
         # check every name before inserting any, so a collision cannot
         # leave a half-completed registration behind
@@ -86,6 +98,7 @@ def register_topology(name: str, *, aliases: tuple[str, ...] = (),
             finite_time=_as_law(finite_time, "bool"),
             max_degree=_as_law(max_degree, "int"),
             valid_n=valid_n or (lambda spec: True),
+            degrades_gracefully=_as_law(degrades_gracefully, "bool"),
             extra_params=dict(extra_params or {}),
             aliases=tuple(aliases),
             description=description or (doc[0] if doc else ""))

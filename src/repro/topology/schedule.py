@@ -87,6 +87,27 @@ class Schedule:
     def bytes_per_node_per_round(self, param_bytes: int) -> float:
         return self._mats.bytes_per_node_per_round(param_bytes)
 
+    # -- robustness metadata (DESIGN.md Sec. 11) --------------------------
+
+    def effective_neighbors(self, *, per_round: bool = False) -> float:
+        """Effective number of neighbors (Vogels et al.): the full-period
+        product's ``n / ||W||_F^2`` (finite-time schedules score exactly
+        ``n``), or the mean per-round value with ``per_round=True``."""
+        from repro.core.mixing import effective_neighbors
+        return effective_neighbors(self._mats, per_round=per_round)
+
+    @property
+    def degrades_gracefully(self) -> bool:
+        """The registry's degrades-gracefully law for this spec: whether
+        every round stays a valid doubly-stochastic mixer under the
+        failure model's partial-participation re-normalization.  Raw
+        (spec-less) schedules conservatively report False — nothing has
+        vouched for their rounds."""
+        if self.spec is None:
+            return False
+        return bool(get_registration(self.spec.name)
+                    .degrades_gracefully(self.spec))
+
     @property
     def label(self) -> str:
         """Legacy row label (``name`` / ``name-k<k>``), derived from the

@@ -1,0 +1,336 @@
+"""Failure-realistic engine conformance (ISSUE 6).
+
+The tentpole invariant: the all-clean ``FailureModel()`` runs the SAME
+compiled program as the synchronous scan engine — bit-exact losses,
+accuracies and consensus.  Plus the renormalization rule's invariants
+(exact double stochasticity over survivors, numpy/jnp parity), the
+per-behavior semantics (clocks, stragglers, churn resets, Byzantine
+honest-only metrics), method compatibility checks, and sweep/single-run
+parity under a shared failure trace.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_mlp import MLPConfig
+from repro.core.mixing import (effective_neighbors, is_doubly_stochastic,
+                               masked_effective_W)
+from repro.data.synthetic import dirichlet_classification
+from repro.models import mlp
+from repro.optim.decentralized import make_method
+from repro.sim import FailureModel, simulate_decentralized
+from repro.sim.failure import effective_W
+from repro.sim.sweep import sweep_decentralized
+from repro.topology import TopologySpec, build_schedule
+
+N = 8
+STEPS = 30
+
+
+def _setup(n=N, seed=3):
+    cfg = MLPConfig(input_dim=16, hidden=(32,), num_classes=4)
+    data = dirichlet_classification(n, 128, dim=16, num_classes=4,
+                                    alpha=0.5, margin=0.8, seed=seed)
+    params = mlp.init(cfg, jax.random.PRNGKey(0))
+
+    def batches(step, bs=16):
+        i = (step * bs) % (128 - bs)
+        return (jnp.asarray(data.node_x[:, i:i + bs]),
+                jnp.asarray(data.node_y[:, i:i + bs]))
+
+    def eval_fn(p):
+        return mlp.accuracy(p, jnp.asarray(data.test_x),
+                            jnp.asarray(data.test_y))
+
+    return params, batches, eval_fn
+
+
+def _kw(params, batches, eval_fn, method="dsgdm", **over):
+    kw = dict(loss_fn=mlp.loss_fn, params=params,
+              method=make_method(method),
+              schedule=TopologySpec(name="base", n=N, k=2),
+              batches=batches, steps=STEPS, eta=0.05, eval_fn=eval_fn,
+              eval_every=10)
+    kw.update(over)
+    return kw
+
+
+# ---------------------------------------------------------------------------
+# the tentpole invariant: clean == synchronous, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method_name", ["dsgd", "dsgdm", "qg-dsgdm", "d2"])
+def test_clean_model_bit_exact_vs_sync_scan(method_name):
+    params, batches, eval_fn = _setup()
+    kw = _kw(params, batches, eval_fn, method=method_name)
+    sync = simulate_decentralized(**kw)
+    clean = simulate_decentralized(**kw, failure=FailureModel())
+    np.testing.assert_array_equal(sync.losses, clean.losses)
+    np.testing.assert_array_equal(sync.test_acc, clean.test_acc)
+    np.testing.assert_array_equal(sync.consensus, clean.consensus)
+    np.testing.assert_array_equal(clean.clocks, np.full(N, STEPS))
+    assert sync.clocks is None
+
+
+def test_clean_model_bit_exact_vs_loop_backend():
+    params, batches, eval_fn = _setup()
+    kw = _kw(params, batches, eval_fn)
+    loop = simulate_decentralized(backend="loop", **kw)
+    clean = simulate_decentralized(**kw, failure=FailureModel())
+    np.testing.assert_array_equal(loop.losses, clean.losses)
+    np.testing.assert_array_equal(loop.test_acc, clean.test_acc)
+    np.testing.assert_array_equal(loop.consensus, clean.consensus)
+
+
+# ---------------------------------------------------------------------------
+# renormalization rule
+# ---------------------------------------------------------------------------
+
+def _round_matrices():
+    out = []
+    for name, k in (("base", 2), ("exp", None), ("ring", None),
+                    ("d_equistatic", 3)):
+        sched = build_schedule(TopologySpec(name=name, n=9, k=k, seed=4))
+        out += [np.asarray(W, np.float64) for W in sched.Ws]
+    return out
+
+
+def test_masked_effective_W_stays_doubly_stochastic():
+    """For symmetric AND directed doubly-stochastic rounds, any survivor
+    subset yields an exactly doubly stochastic matrix with dead nodes on
+    the identity."""
+    rng = np.random.default_rng(0)
+    for W in _round_matrices():
+        n = W.shape[0]
+        for _ in range(6):
+            alive = rng.random(n) < 0.6
+            Weff = masked_effective_W(W, alive)
+            assert is_doubly_stochastic(Weff, atol=1e-9), (W, alive)
+            for i in np.nonzero(~alive)[0]:
+                row = np.zeros(n)
+                row[i] = 1.0
+                np.testing.assert_allclose(Weff[i], row, atol=1e-12)
+                np.testing.assert_allclose(Weff[:, i], row, atol=1e-12)
+
+
+def test_masked_effective_W_all_alive_is_identity_op():
+    W = _round_matrices()[0]
+    out = masked_effective_W(W, np.ones(W.shape[0], bool))
+    assert out is W
+
+
+def test_effective_W_jnp_matches_numpy_reference():
+    rng = np.random.default_rng(1)
+    for W in _round_matrices():
+        n = W.shape[0]
+        alive = rng.random(n) < 0.5
+        ref = masked_effective_W(W, alive)
+        # jnp runs in float32 by default; parity is at f32 resolution
+        got = np.asarray(effective_W(jnp.asarray(W, jnp.float32),
+                                     jnp.asarray(alive)), np.float64)
+        np.testing.assert_allclose(got, ref, atol=1e-6)
+        # fully-alive jnp path reduces to W (the engine skips the call
+        # on the clean path; this pins the where-guard against s == 0)
+        full = np.asarray(effective_W(jnp.asarray(W, jnp.float32),
+                                      jnp.ones(n, bool)), np.float64)
+        np.testing.assert_allclose(full, W, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# per-behavior semantics
+# ---------------------------------------------------------------------------
+
+def test_dropout_clocks_count_participation():
+    params, batches, eval_fn = _setup()
+    res = simulate_decentralized(
+        **_kw(params, batches, eval_fn),
+        failure=FailureModel(drop_rate=0.4, seed=1))
+    assert res.clocks.shape == (N,)
+    assert (res.clocks < STEPS).any()          # someone dropped
+    assert (res.clocks > 0).all()
+    assert np.isfinite(res.losses).all()
+
+
+def test_stragglers_participate_one_in_period():
+    params, batches, eval_fn = _setup()
+    fm = FailureModel(straggler_rate=0.999, straggler_period=5, seed=2)
+    assert fm.straggler_mask(N).all()
+    res = simulate_decentralized(**_kw(params, batches, eval_fn),
+                                 failure=fm)
+    # every node is a straggler: active iff t % 5 == node % 5 -> each
+    # node participates exactly ceil/floor(STEPS/5) times
+    want = np.array([len([t for t in range(STEPS) if t % 5 == i % 5])
+                     for i in range(N)])
+    np.testing.assert_array_equal(res.clocks, want)
+
+
+def test_churn_resets_clocks_but_keeps_params_finite():
+    params, batches, eval_fn = _setup()
+    res = simulate_decentralized(
+        **_kw(params, batches, eval_fn),
+        failure=FailureModel(churn_rate=0.1, seed=4))
+    assert (res.clocks < STEPS).any()           # someone was replaced
+    assert np.isfinite(res.losses).all() and np.isfinite(res.test_acc).all()
+
+
+def test_delay_changes_trajectory_but_stays_stable():
+    params, batches, eval_fn = _setup()
+    kw = _kw(params, batches, eval_fn)
+    sync = simulate_decentralized(**kw)
+    stale = simulate_decentralized(**kw,
+                                   failure=FailureModel(delay=3, seed=1))
+    assert not np.array_equal(sync.losses, stale.losses)
+    assert np.isfinite(stale.losses).all()
+    # bounded staleness never drops a round: clocks stay full
+    np.testing.assert_array_equal(stale.clocks, np.full(N, STEPS))
+
+
+def test_byzantine_metrics_are_honest_only():
+    """With unbounded 'random' broadcasts, honest nodes are perturbed
+    but the honest-only loss/eval metrics must remain finite."""
+    params, batches, eval_fn = _setup()
+    fm = FailureModel(byzantine_frac=0.25, byzantine_mode="random",
+                      byzantine_scale=100.0, seed=6)
+    byz = fm.byzantine_mask(N)
+    assert byz.any() and not byz.all()
+    res = simulate_decentralized(**_kw(params, batches, eval_fn),
+                                 failure=fm)
+    assert np.isfinite(res.losses).all()
+    assert np.isfinite(res.consensus).all()
+
+
+def test_byzantine_mask_forces_at_least_one():
+    fm = FailureModel(byzantine_frac=0.01, byzantine_mode="sign_flip",
+                      seed=0)
+    assert fm.byzantine_mask(4).sum() >= 1
+    assert not FailureModel().byzantine_mask(4).any()
+
+
+def test_failure_trace_reproducible_and_seed_sensitive():
+    params, batches, eval_fn = _setup()
+    kw = _kw(params, batches, eval_fn)
+    a = simulate_decentralized(**kw,
+                               failure=FailureModel(drop_rate=0.3, seed=1))
+    b = simulate_decentralized(**kw,
+                               failure=FailureModel(drop_rate=0.3, seed=1))
+    c = simulate_decentralized(**kw,
+                               failure=FailureModel(drop_rate=0.3, seed=2))
+    np.testing.assert_array_equal(a.losses, b.losses)
+    np.testing.assert_array_equal(a.clocks, b.clocks)
+    assert not np.array_equal(a.losses, c.losses)
+
+
+# ---------------------------------------------------------------------------
+# method compatibility + dispatch guards
+# ---------------------------------------------------------------------------
+
+def test_gradient_tracking_rejected_for_mixer_closure_regimes():
+    params, batches, eval_fn = _setup()
+    for fm in (FailureModel(delay=2),
+               FailureModel(byzantine_frac=0.2,
+                            byzantine_mode="sign_flip")):
+        with pytest.raises(ValueError, match="mixes_per_step"):
+            simulate_decentralized(**_kw(params, batches, eval_fn,
+                                         method="gt"), failure=fm)
+
+
+def test_gradient_tracking_allowed_for_drop_only():
+    params, batches, eval_fn = _setup()
+    res = simulate_decentralized(
+        **_kw(params, batches, eval_fn, method="gt"),
+        failure=FailureModel(drop_rate=0.2, seed=5))
+    assert np.isfinite(res.losses).all()
+
+
+def test_loop_backend_rejects_failure_models():
+    params, batches, eval_fn = _setup()
+    with pytest.raises(ValueError, match="scan backend"):
+        simulate_decentralized(**_kw(params, batches, eval_fn),
+                               backend="loop",
+                               failure=FailureModel(drop_rate=0.1))
+
+
+def test_failure_model_validation():
+    with pytest.raises(ValueError, match="delay"):
+        FailureModel(delay=-1)
+    with pytest.raises(ValueError, match="drop_rate"):
+        FailureModel(drop_rate=1.5)
+    with pytest.raises(ValueError, match="byzantine_mode"):
+        FailureModel(byzantine_mode="poison")
+    with pytest.raises(ValueError, match="requires a byzantine_mode"):
+        FailureModel(byzantine_frac=0.2)
+    with pytest.raises(ValueError, match="straggler_period"):
+        FailureModel(straggler_period=1)
+
+
+def test_compiled_failure_runners_are_memoized():
+    from repro.sim.engine import compiled_failure_run
+    m = make_method("dsgdm")
+    fm = FailureModel(drop_rate=0.1)
+    assert compiled_failure_run(mlp.loss_fn, m, 0.05, None, fm) \
+        is compiled_failure_run(mlp.loss_fn, m, 0.05, None, fm)
+    assert compiled_failure_run(
+        mlp.loss_fn, m, 0.05, None, FailureModel(drop_rate=0.2)) \
+        is not compiled_failure_run(mlp.loss_fn, m, 0.05, None, fm)
+
+
+# ---------------------------------------------------------------------------
+# sweep layer: per-cell parity under a shared failure trace
+# ---------------------------------------------------------------------------
+
+def test_failure_sweep_matches_independent_runs():
+    params, batches, eval_fn = _setup()
+    scheds = [build_schedule(TopologySpec(name="base", n=N, k=1)),
+              build_schedule(TopologySpec(name="exp", n=N)),
+              build_schedule(TopologySpec(name="ring", n=N))]
+    fm = FailureModel(drop_rate=0.25, delay=2, seed=7)
+    sw = sweep_decentralized(
+        loss_fn=mlp.loss_fn, params=params, method=make_method("dsgdm"),
+        schedules=scheds, batches=batches, steps=STEPS, eta=0.05,
+        eval_fn=eval_fn, eval_every=10, failure=fm)
+    assert sw.clocks.shape == (3, 1, N)
+    for c, sched in enumerate(scheds):
+        ref = simulate_decentralized(
+            **_kw(params, batches, eval_fn, schedule=sched), failure=fm)
+        cell = sw.run(c)
+        np.testing.assert_array_equal(ref.losses, cell.losses)
+        np.testing.assert_array_equal(ref.test_acc, cell.test_acc)
+        np.testing.assert_array_equal(ref.consensus, cell.consensus)
+        np.testing.assert_array_equal(ref.clocks, cell.clocks)
+    # common random numbers: every config saw the SAME participation
+    # trace, hence identical clocks across configs
+    np.testing.assert_array_equal(sw.clocks[0], sw.clocks[1])
+    np.testing.assert_array_equal(sw.clocks[0], sw.clocks[2])
+
+
+def test_failure_sweep_rejects_gt_with_delay():
+    params, batches, eval_fn = _setup()
+    with pytest.raises(ValueError, match="mixes_per_step"):
+        sweep_decentralized(
+            loss_fn=mlp.loss_fn, params=params, method=make_method("gt"),
+            schedules=[build_schedule(TopologySpec(name="ring", n=N))],
+            batches=batches, steps=4, eta=0.05,
+            failure=FailureModel(delay=1))
+
+
+# ---------------------------------------------------------------------------
+# effective number of neighbors
+# ---------------------------------------------------------------------------
+
+def test_effective_neighbors_bounds_and_finite_time():
+    for name, k, n in (("base", 2, 12), ("one_peer_exp", None, 16),
+                       ("exp", None, 12), ("ring", None, 12),
+                       ("complete", None, 12)):
+        sched = build_schedule(TopologySpec(name=name, n=n, k=k))
+        for per_round in (False, True):
+            v = sched.effective_neighbors(per_round=per_round)
+            assert 1.0 <= v <= n + 1e-9, (name, per_round, v)
+        if sched.finite_time:
+            # the full-period product is exact averaging -> exactly n
+            assert sched.effective_neighbors() == pytest.approx(n)
+    # identity mixes nothing: scores exactly 1
+    from repro.core.graphs import TopologySchedule
+    eye = TopologySchedule("id", 5, [np.eye(5)], None, False, 0)
+    assert effective_neighbors(eye) == pytest.approx(1.0)
+    assert effective_neighbors(eye, per_round=True) == pytest.approx(1.0)

@@ -197,3 +197,70 @@ def test_seeded_topologies_cache_per_seed():
     assert a is not b
     assert not np.array_equal(a.W(0), b.W(0))
     assert build_schedule(TopologySpec("d_equistatic", 25, 3, seed=1)) is b
+
+
+# ---------------------------------------------------------------------------
+# failure-realistic metadata (ISSUE 6): degrades-gracefully law +
+# effective number of neighbors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", registered_names())
+def test_degrades_gracefully_law(name):
+    """The registered law must agree with measured reality: every round,
+    re-normalized over sampled survivor subsets by the failure model's
+    rule, stays exactly doubly stochastic with dead nodes isolated on
+    the identity — and the all-alive mask is a pass-through."""
+    from repro.core.mixing import masked_effective_W
+
+    reg = get_registration(name)
+    rng = np.random.default_rng(0)
+    for spec in sample_specs(name, max_specs=6):
+        sched = build_schedule(spec)
+        n = sched.n
+        measured = True
+        for r in range(max(1, len(sched))):
+            W = np.asarray(sched.W(r), np.float64)
+            assert masked_effective_W(W, np.ones(n, bool)) is W
+            for _ in range(4):
+                alive = rng.random(n) < 0.6
+                Weff = masked_effective_W(W, alive)
+                ok = is_doubly_stochastic(Weff, atol=1e-9)
+                for i in np.nonzero(~alive)[0]:
+                    e = np.zeros(n)
+                    e[i] = 1.0
+                    ok = ok and np.allclose(Weff[i], e, atol=1e-12) \
+                        and np.allclose(Weff[:, i], e, atol=1e-12)
+                measured = measured and ok
+        assert measured == reg.degrades_gracefully(spec), \
+            (spec, "degrades-gracefully law")
+        assert sched.degrades_gracefully == reg.degrades_gracefully(spec)
+        assert isinstance(reg.degrades_gracefully(spec), bool)
+
+
+@pytest.mark.parametrize("name", registered_names())
+def test_effective_neighbors_in_bounds(name):
+    """1 <= n_eff <= n for every registered configuration (W doubly
+    stochastic => 1 <= ||W||_F^2 <= n), and a finite-time schedule's
+    full-period product scores exactly n (exact averaging)."""
+    for spec in sample_specs(name, max_specs=6):
+        sched = build_schedule(spec)
+        whole = sched.effective_neighbors()
+        per_round = sched.effective_neighbors(per_round=True)
+        for v in (whole, per_round):
+            assert 1.0 - 1e-9 <= v <= spec.n * (1 + 1e-9), (spec, v)
+        if sched.finite_time:
+            assert whole == pytest.approx(spec.n), spec
+        # one compiled period mixes at least as much as one round does
+        # on average, up to f64 rounding
+        assert whole >= per_round - 1e-9, spec
+
+
+def test_raw_schedule_degrades_conservatively():
+    """A spec-less Schedule (no registration to vouch for it) reports
+    degrades_gracefully=False."""
+    from repro.core.graphs import build_topology
+    from repro.topology import as_schedule
+
+    raw = as_schedule(build_topology("ring", 6))
+    assert raw.spec is None
+    assert raw.degrades_gracefully is False
