@@ -55,8 +55,12 @@ METRIC_ABS_FLOOR = 1e-12
 # the scan-vs-loop token-parity bit.  The failure suite times whole
 # compiled sweeps (compile-cache-state dominated); its gated signal is
 # the bit-exactness indicator, the renormalization/degrades checks, the
-# effective-neighbors metrics and the accuracy table.
-UNGATED_TIMING_SUITES = frozenset({"kernels", "serving", "failure"})
+# effective-neighbors metrics and the accuracy table.  The overlap
+# suite times a fake-8-device mesh on a 2-core runner (pure scheduler
+# jitter, and the CPU backend serialises the collectives being
+# overlapped); its gated signal is the bit_exact indicator.
+UNGATED_TIMING_SUITES = frozenset({"kernels", "serving", "failure",
+                                   "overlap"})
 
 # registry._sanitize serializes non-finite floats as strings, so both
 # the numeric and string encodings must be recognised

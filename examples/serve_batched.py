@@ -9,10 +9,9 @@ benchmark (`benchmarks/serving.py`) keeps as the reference.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
-import os
+from repro.launch.env import set_host_device_count
 
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=8")
+set_host_device_count(8)
 
 import time
 

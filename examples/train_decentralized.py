@@ -10,7 +10,8 @@ CPU; the same flags run unchanged on a real TPU mesh).
         [--preset tiny|100m] [--steps 200] [--topology base --k 1]
 """
 import argparse
-import os
+
+from repro.launch.env import set_host_device_count
 
 
 def main():
@@ -25,9 +26,7 @@ def main():
     ap.add_argument("--devices", type=int, default=8)
     args = ap.parse_args()
 
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={args.devices}")
+    set_host_device_count(args.devices, strict=True)
 
     from dataclasses import replace
 

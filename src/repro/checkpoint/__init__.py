@@ -1,1 +1,2 @@
-from .io import load_pytree, save_pytree
+from .io import (AsyncCheckpointer, load_pytree,  # noqa: F401
+                 save_pytree)

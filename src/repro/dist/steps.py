@@ -70,6 +70,7 @@ class TrainStepBundle:
     param_shardings: Any
     spec: TopologySpec | None = None   # canonical topology spec
     kernel_config: ops.KernelConfig | None = None
+    overlap: bool = False         # gossip/backward overlap enabled?
 
 
 def make_train_step(cfg, mesh, *,
@@ -80,7 +81,8 @@ def make_train_step(cfg, mesh, *,
                     flatten_gossip: bool = False,
                     embed_lookup_replicated: bool = False,
                     batch_shapes=None, momentum: float = 0.9,
-                    kernel_config: ops.KernelConfig | None = None
+                    kernel_config: ops.KernelConfig | None = None,
+                    overlap: bool = False
                     ) -> TrainStepBundle:
     """One DSGD-family step: per-node grads -> method update -> gossip
     round ``step % n_rounds`` over the mesh's node axis.
@@ -94,7 +96,23 @@ def make_train_step(cfg, mesh, *,
     update and the gossip combine.  ``None`` resolves the process-wide
     default HERE, at factory time — the bundle's jitted step is built
     against the resolved value (and records it), so later flips of the
-    default cannot silently retarget an already-built step."""
+    default cannot silently retarget an already-built step.
+
+    ``overlap=True`` enables communication/computation overlap: instead
+    of one whole-tree method-update + gossip barrier after the full
+    backward, the parameter tree is split into its top-level groups
+    (embed / stack / final_norm / lm_head / ...) and each group's update
+    + gossip is emitted as its own independent chain.  Because every
+    group's gossip then depends only on THAT group's gradients — and in
+    reverse-mode the output-end grads (lm_head, final_norm, mtp) are
+    produced before the layer stack's backward scan even starts — XLA's
+    scheduler is free to run those groups' collective-permutes while the
+    stack backward is still computing ("gossip layer l while layer l+1's
+    backward runs", at the granularity the scan-stacked layers permit:
+    the stack is one scan op, so intra-stack layers share one group).
+    The mixing weights, per-leaf arithmetic, and reduction order are
+    identical to the sequential path, so results are BIT-EXACT either
+    way (pinned by tests/test_overlap.py); only the schedule differs."""
     kcfg = ops.resolve_config(kernel_config)
     rules = make_rules(mesh, arch_name=cfg.name, context="train")
     n = rules.n_nodes
@@ -130,9 +148,20 @@ def make_train_step(cfg, mesh, *,
                                                               rules)))
     scalar = NamedSharding(mesh, P())
 
+    # Degenerate 1-node gossip has no communication to overlap with.
+    overlap = overlap and rules.node_axis is not None
     if rules.node_axis is None:
         def mix_round(tree, step):
             return tree
+    elif overlap:
+        # One independent mixer per top-level parameter group: separate
+        # shard_map regions -> separate collective chains the scheduler
+        # can interleave with compute (see the factory docstring).
+        group_mixers = {
+            key: make_gossip_mixer(mesh, plan, rules.node_axis,
+                                   pspecs[key], flatten=flatten_gossip,
+                                   kernel_config=kcfg)
+            for key in p_sds}
     else:
         mix_round = make_gossip_mixer(mesh, plan, rules.node_axis, pspecs,
                                       flatten=flatten_gossip,
@@ -158,8 +187,27 @@ def make_train_step(cfg, mesh, *,
             params_l["embed"] = {"table": table}
         losses, grads = jax.vmap(jax.value_and_grad(loss_one))(
             params_l, batch)
-        params_n, opt = method.step(params_n, grads, opt,
-                                    lambda t: mix_round(t, step), eta)
+        if overlap:
+            # Per-group update + gossip.  Method state trees mirror the
+            # params structure (init is zeros_like / tree.map over
+            # params), so the state splits and re-merges along the same
+            # top-level keys.  Every method's update and mixing are
+            # per-leaf, hence grouping is bit-exact vs the whole-tree
+            # call — the Python loop order is irrelevant to the XLA
+            # schedule, which follows the per-group data dependencies.
+            new_p, new_opt = {}, {sk: {} for sk in opt}
+            for key in params_n:
+                sub_state = {sk: sv[key] for sk, sv in opt.items()}
+                p_k, s_k = method.step(
+                    params_n[key], grads[key], sub_state,
+                    lambda t, _k=key: group_mixers[_k](t, step), eta)
+                new_p[key] = p_k
+                for sk in s_k:
+                    new_opt[sk][key] = s_k[sk]
+            params_n, opt = new_p, new_opt
+        else:
+            params_n, opt = method.step(params_n, grads, opt,
+                                        lambda t: mix_round(t, step), eta)
         return params_n, opt, losses.mean()
 
     step_fn = jax.jit(_step, in_shardings=(psh, osh, bsh, scalar),
@@ -168,7 +216,7 @@ def make_train_step(cfg, mesh, *,
                            rules=rules,
                            schedule=sched.as_topology_schedule(), plan=plan,
                            param_shardings=psh, spec=sched.spec,
-                           kernel_config=kcfg)
+                           kernel_config=kcfg, overlap=overlap)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,13 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
+
+from repro.launch.env import set_host_device_count
+
+# The production meshes need 512 fake host devices; the idempotent
+# central setter replaces any stale flag value instead of appending (the
+# historical in-line mutation grew XLA_FLAGS on every import) and warns
+# when jax initialised first, in which case compiling the 16x16 meshes
+# below cannot work anyway.
+set_host_device_count(512)
 
 """Multi-pod dry run (assignment deliverable e).
 

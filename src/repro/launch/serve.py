@@ -14,7 +14,8 @@ region, whose steady-state tokens/s is what the engine actually serves
 at.
 """
 import argparse
-import os
+
+from repro.launch.env import set_host_device_count
 
 
 def main() -> None:
@@ -39,9 +40,7 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.devices}")
+        set_host_device_count(args.devices, strict=True)
 
     import time
 

@@ -10,7 +10,10 @@ reduced arch:
         --topology base --k 1 --method dsgdm --steps 100
 """
 import argparse
-import os
+
+from repro.launch.distributed import (add_distributed_args,
+                                      config_from_args, initialize)
+from repro.launch.env import set_host_device_count
 
 
 def main() -> None:
@@ -35,19 +38,26 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="also checkpoint (async) every N steps")
     ap.add_argument("--flatten-gossip", action="store_true")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlap gossip with the method update / "
+                         "backward tail (bit-exact vs sequential)")
+    add_distributed_args(ap)
     args = ap.parse_args()
 
     if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.devices}")
+        set_host_device_count(args.devices, strict=True)
+    # Multi-process bring-up (no-op for the default single-process
+    # config); must precede the first jax use below.
+    initialize(config_from_args(args))
 
     import jax
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.checkpoint import save_pytree
+    from repro.checkpoint import AsyncCheckpointer, save_pytree
     from repro.configs import get_config
     from repro.data.synthetic import token_batches
     from repro.dist.steps import make_train_step
@@ -72,7 +82,8 @@ def main() -> None:
     bundle = make_train_step(cfg, mesh, topology=args.topology, k=args.k,
                              method_name=args.method, eta=args.eta,
                              param_dtype=dtype, remat=not args.reduced,
-                             flatten_gossip=args.flatten_gossip)
+                             flatten_gossip=args.flatten_gossip,
+                             overlap=args.overlap)
     n = bundle.n_nodes
     print(f"topology spec: {bundle.spec.to_json()} "
           f"({bundle.n_rounds} rounds)")
@@ -100,6 +111,7 @@ def main() -> None:
             ).reshape(n, b, 16, cfg.d_model)
         return out
 
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
     losses = []
     for step in range(args.steps):
         params_n, opt, loss = bundle.step_fn(params_n, opt, mk_batch(step),
@@ -109,8 +121,16 @@ def main() -> None:
             print(f"step {step:5d}  loss {losses[-1]:.4f}  "
                   f"(round {step % bundle.n_rounds}/{bundle.n_rounds})",
                   flush=True)
+        if ckpt is not None and args.ckpt_every \
+                and step and step % args.ckpt_every == 0:
+            # Background write; the training loop keeps stepping while
+            # the previous snapshot streams to disk.
+            ckpt.save({"params": params_n, "opt": opt,
+                       "step": jnp.int32(step)}, name="latest")
     print(f"first-10 mean {np.mean(losses[:10]):.4f}  "
           f"last-10 mean {np.mean(losses[-10:]):.4f}")
+    if ckpt is not None:
+        ckpt.wait()
     if args.ckpt_dir:
         avg = jax.tree.map(lambda x: x.mean(axis=0), params_n)
         print("saved:", save_pytree(avg, args.ckpt_dir))

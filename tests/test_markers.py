@@ -1,0 +1,80 @@
+"""The ``multidevice`` marker is enforced end-to-end:
+
+* it is registered in pyproject.toml (so --strict-markers setups and
+  typo'd marks fail loudly),
+* the tier-1 CI lane excludes it and the multihost lane selects it,
+* every test file that uses the marker is actually collected by the
+  multihost lane's selection expression — a marked test that silently
+  falls out of collection is a test that never runs anywhere.
+
+The CI-workflow checks are deliberately text-based (no yaml dependency
+in the image); they pin the load-bearing substrings.
+"""
+import os
+import re
+import subprocess
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_CI = os.path.join(_REPO, ".github", "workflows", "ci.yml")
+_TESTS = os.path.join(_REPO, "tests")
+
+
+def _ci_text() -> str:
+    with open(_CI) as f:
+        return f.read()
+
+
+def test_marker_registered_in_pyproject():
+    with open(os.path.join(_REPO, "pyproject.toml")) as f:
+        assert re.search(r'^\s*"multidevice:', f.read(), re.M)
+
+
+def test_tier1_lane_excludes_multidevice():
+    assert '-m "not multidevice"' in _ci_text()
+
+
+def test_multihost_lane_selects_multidevice():
+    text = _ci_text()
+    assert "multihost:" in text, "multihost CI lane missing"
+    assert "-m multidevice" in text
+    assert "REPRO_TEST_DEVICES" in text
+    # workflow_dispatch widens the virtual-device matrix to {2, 8, 32};
+    # push/PR runs the default 8 only
+    assert re.search(r"\[2,\s*8,\s*32\]", text)
+    assert re.search(r"\[8\]", text)
+
+
+def test_marked_files_all_collected():
+    """pytest --collect-only -q -m multidevice must (a) collect a
+    non-empty set and (b) cover EVERY file that uses the marker."""
+    mark_re = re.compile(
+        r"^(?:pytestmark\s*=\s*|\s*@)pytest\.mark\.multidevice\b", re.M)
+    marked_files = set()
+    for fname in sorted(os.listdir(_TESTS)):
+        if not fname.endswith(".py"):
+            continue
+        with open(os.path.join(_TESTS, fname)) as f:
+            if mark_re.search(f.read()):
+                marked_files.add(fname)
+    assert marked_files, "no files use the multidevice marker?"
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q",
+         "-m", "multidevice", "-p", "no:cacheprovider"],
+        capture_output=True, text=True, cwd=_REPO, env=env, timeout=300)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    # -q collect-only prints either "path::test" node ids (older
+    # pytest) or "path: N" per-file counts (pytest >= 8)
+    collected_files = set()
+    for ln in r.stdout.splitlines():
+        m = re.match(r"(tests/[\w.]+\.py)(?:::|:\s*\d+)", ln.strip())
+        if m:
+            collected_files.add(m.group(1).split("/")[-1])
+    assert collected_files, r.stdout
+    missing = marked_files - collected_files
+    assert not missing, (f"files with multidevice-marked tests not "
+                         f"collected by -m multidevice: {sorted(missing)}")
