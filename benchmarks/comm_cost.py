@@ -1,11 +1,18 @@
 """Paper Table 1 / 2: per-topology communication cost and consensus
 characteristics — max degree, messages per node per round, bytes per node
 per round for an 8B-parameter bf16 model, spectral consensus rate (static
-graphs), finite-time length (time-varying)."""
+graphs), finite-time length (time-varying).
+
+Plus the repro.compress extension: compressed bytes/node/round per codec
+per topology — the schedule's message count times the codec's exact
+on-wire payload size (``CompressionConfig.wire_bytes``), against the f32
+gossip work buffers the dist runtime actually permutes uncompressed."""
 from __future__ import annotations
 
 import time
 
+from repro.compress import (CODEC_NAMES, UNCOMPRESSED_BYTES_PER_PARAM,
+                            CompressionConfig)
 from repro.core.mixing import (is_finite_time_convergent,
                                spectral_consensus_rate)
 from repro.topology import TopologySpec, build_schedule
@@ -14,10 +21,15 @@ from .common import emit
 from .registry import register
 
 PARAM_BYTES = int(8e9 * 2)     # 8B params, bf16
+N_PARAMS = int(8e9)            # the same model, in parameters
 
 TOPOS = [("base", 1), ("base", 2), ("base", 4), ("simple_base", 1),
          ("one_peer_exp", None), ("exp", None), ("ring", None),
          ("torus", None), ("complete", None)]
+
+
+def _label(name, k, n):
+    return f"comm/{name}" + (f"-k{k}" if k is not None else "") + f"/n{n}"
 
 
 @register("comm_cost", fast=True)
@@ -35,7 +47,7 @@ def run(ns=(25, 64, 256)) -> dict:
             else:
                 rate = (f"finite_len={len(s)}"
                         if is_finite_time_convergent(s) else "asymptotic")
-            label = f"comm/{name}" + (f"-k{k}" if k else "") + f"/n{n}"
+            label = _label(name, k, n)
             emit(label, us,
                  f"maxdeg={s.max_degree};GB_per_node_round={gb:.1f};{rate}",
                  spec=s.spec)
@@ -45,4 +57,32 @@ def run(ns=(25, 64, 256)) -> dict:
         exp_gb = out[f"comm/exp/n{n}"]["gb"]
         for k in (1, 2):
             assert out[f"comm/base-k{k}/n{n}"]["gb"] < exp_gb
+
+    # -- compressed gossip payloads (repro.compress) ----------------------
+    # Uncompressed reference = the f32 work buffers the dist gossip
+    # actually ppermutes (4 B/param), NOT the bf16 at-rest size above.
+    n = ns[0]
+    for name, k in TOPOS:
+        s = build_schedule(TopologySpec(name=name, n=n, k=k))
+        base_gb = s.bytes_per_node_per_round(
+            UNCOMPRESSED_BYTES_PER_PARAM * N_PARAMS) / 1e9
+        ratios = {}
+        for codec in CODEC_NAMES:
+            if codec == "identity":
+                continue
+            t0 = time.perf_counter()
+            ccfg = CompressionConfig(codec=codec)
+            gb = s.bytes_per_node_per_round(ccfg.wire_bytes(N_PARAMS)) / 1e9
+            us = (time.perf_counter() - t0) * 1e6
+            ratios[codec] = base_gb / gb if gb else float("inf")
+            label = _label(name, k, n) + f"/{codec}"
+            emit(label, us,
+                 f"GB_per_node_round={gb:.2f};ratio={ratios[codec]:.2f}",
+                 spec=s.spec)
+            out[label] = dict(gb=gb, ratio=ratios[codec])
+        # int8 pays one f32 scale per 256-element chunk (3.94x); the
+        # byte headline (>= 4x fewer bytes/node/round per topology) is
+        # carried by the int4 / topk codecs.
+        assert ratios["int8"] >= 3.9, ratios
+        assert max(ratios.values()) >= 4.0, ratios
     return out

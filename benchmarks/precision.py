@@ -36,18 +36,23 @@ def run(n: int = 21) -> dict:
     base = build_schedule(TopologySpec(name="base", n=n, k=2))
     ring = build_schedule(TopologySpec(name="ring", n=n))
     budget = len(base)
-    for dtype, name in ((jnp.float64, "f64"), (jnp.float32, "f32"),
-                        (jnp.bfloat16, "bf16")):
-        if dtype == jnp.float64:
-            jax.config.update("jax_enable_x64", True)
-        e_base = _run_curve(base, budget, dtype)
-        e_ring = _run_curve(ring, budget, dtype)
-        emit(f"precision/{name}/n{n}", 0.0,
-             f"base_residual={e_base:.3e};ring_residual={e_ring:.3e};"
-             f"advantage={e_ring / max(e_base, 1e-300):.1e}x",
-             spec=base.spec)   # the row's subject is the Base-(k+1) graph
-        out[name] = (e_base, e_ring)
-    jax.config.update("jax_enable_x64", False)
+    # The x64 toggle is process-global state: restore it even when a
+    # curve run throws, or every later f32/bf16 suite in the same
+    # process would silently run (and compile) in x64 mode.
+    try:
+        for dtype, name in ((jnp.float64, "f64"), (jnp.float32, "f32"),
+                            (jnp.bfloat16, "bf16")):
+            if dtype == jnp.float64:
+                jax.config.update("jax_enable_x64", True)
+            e_base = _run_curve(base, budget, dtype)
+            e_ring = _run_curve(ring, budget, dtype)
+            emit(f"precision/{name}/n{n}", 0.0,
+                 f"base_residual={e_base:.3e};ring_residual={e_ring:.3e};"
+                 f"advantage={e_ring / max(e_base, 1e-300):.1e}x",
+                 spec=base.spec)  # the row's subject is the Base-(k+1) graph
+            out[name] = (e_base, e_ring)
+    finally:
+        jax.config.update("jax_enable_x64", False)
     # exactness claim holds to rounding: bf16 residual << ring error
     assert out["bf16"][0] < out["bf16"][1] * 1e-2
     assert out["f32"][0] < 1e-10

@@ -43,11 +43,11 @@ SCHEMA_VERSION = 1
 # suite modules imported by load_all(); each registers itself on import
 SUITE_MODULES = ("consensus", "length", "comm_cost", "dsgd_hetero",
                  "robust_methods", "precision", "roofline", "kernels",
-                 "serving", "failure", "overlap")
+                 "serving", "failure", "overlap", "compression")
 
 # the cheap, deterministic suites CI runs on every PR
 FAST_SUITES = ("consensus", "length", "comm_cost", "kernels", "serving",
-               "failure", "overlap")
+               "failure", "overlap", "compression")
 
 
 @dataclass(frozen=True)

@@ -58,9 +58,12 @@ METRIC_ABS_FLOOR = 1e-12
 # effective-neighbors metrics and the accuracy table.  The overlap
 # suite times a fake-8-device mesh on a 2-core runner (pure scheduler
 # jitter, and the CPU backend serialises the collectives being
-# overlapped); its gated signal is the bit_exact indicator.
+# overlapped); its gated signal is the bit_exact indicator.  The
+# compression suite likewise times whole compiled sweeps (one fresh
+# compile per codec); its gated signal is the residual floors, the
+# Pareto loss/accuracy columns and the exact byte accounting.
 UNGATED_TIMING_SUITES = frozenset({"kernels", "serving", "failure",
-                                   "overlap"})
+                                   "overlap", "compression"})
 
 # registry._sanitize serializes non-finite floats as strings, so both
 # the numeric and string encodings must be recognised

@@ -9,11 +9,11 @@
 #     bash scripts/bench_baseline.sh [suites]
 #
 # Default suites are the fast CI lane
-# (consensus,length,comm_cost,kernels,serving,failure,overlap).
+# (consensus,length,comm_cost,kernels,serving,failure,overlap,compression).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-SUITES="${1:-consensus,length,comm_cost,kernels,serving,failure,overlap}"
+SUITES="${1:-consensus,length,comm_cost,kernels,serving,failure,overlap,compression}"
 STEPS=300
 OUT=benchmarks/baselines
 

@@ -1,0 +1,23 @@
+"""repro.compress — quantized + error-feedback gossip payloads
+(DESIGN.md Sec. 13).
+
+Codecs (int8 / fp8 stochastic-rounding quantizers with per-chunk
+scales, int4 nibble packing, top-k sparsification, identity) paired
+with EF21-style error feedback, a frozen hashable
+:class:`CompressionConfig` that travels in jit cache keys like
+``KernelConfig``, and the chunk-row plumbing shared by the dense sim
+engine and the shard_map dist path.
+"""
+from .codecs import CODECS, Codec, get_codec, register_codec
+from .config import (CODEC_NAMES, UNCOMPRESSED_BYTES_PER_PARAM,
+                     CompressionConfig, resolve)
+from .mixing import (compressed_dense_mix, flat_to_rows, init_ef,
+                     leaf_to_rows, rows_to_flat, rows_to_leaf)
+
+__all__ = [
+    "CompressionConfig", "CODEC_NAMES", "UNCOMPRESSED_BYTES_PER_PARAM",
+    "resolve",
+    "Codec", "CODECS", "get_codec", "register_codec",
+    "compressed_dense_mix", "init_ef",
+    "flat_to_rows", "rows_to_flat", "leaf_to_rows", "rows_to_leaf",
+]

@@ -1,0 +1,168 @@
+"""Gossip payload codec registry (DESIGN.md Sec. 13).
+
+Every codec operates on the (R, C) **chunk-row layout**: a node's leaf
+is raveled, zero-padded to a multiple of ``CompressionConfig.chunk``
+and reshaped to one row per scale group (``repro.compress.mixing`` owns
+the leaf <-> rows plumbing).  The contract is two pure functions:
+
+    payload, residual = codec.compress(cfg, x2d, err2d|None, key,
+                                       row_offset, kernel_config)
+    hat2d             = codec.decode(cfg, payload)
+
+* ``payload`` is a dict of arrays — exactly what goes on the wire (the
+  dist path ``ppermute``\\ s each entry; its dtypes ARE the wire
+  format, asserted in tests).
+* ``residual`` is the exact EF21 carry ``(x + err) - hat`` (f32).
+* ``key`` is a folded uint32 from :func:`repro.kernels.ref.sr_key`;
+  ``row_offset`` the global index of row 0, so a shard (rows of one
+  node) and the full node-stacked array produce identical payload bits.
+
+``int8``/``fp8`` dispatch through ``repro.kernels.ops`` (fused Pallas
+quantize+EF kernel when the config selects it; pure-jnp reference
+otherwise) and support the fused dequantize-mix kernel
+(``Codec.fused_mix``).  ``int4`` (two values packed per byte) and
+``topk`` are reference-only: their payloads are combined by decode +
+accumulate in the mixers.  ``identity`` is a real registry entry for
+byte accounting and the Pareto baseline, but execution short-circuits
+before ever reaching it (see ``repro.compress.config.resolve``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class Codec:
+    name: str
+    fused_mix: bool   # ops.quantized_gossip_mix can combine this payload
+    compress: Callable
+    decode: Callable
+
+
+CODECS: dict[str, Codec] = {}
+
+
+def register_codec(codec: Codec) -> Codec:
+    CODECS[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown codec {name!r}; registered: "
+                         f"{sorted(CODECS)}") from None
+
+
+def _sum_err(x, err):
+    s = x.astype(jnp.float32)
+    return s if err is None else s + err.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# identity
+# ---------------------------------------------------------------------------
+
+def _identity_compress(cfg, x, err, key, row_offset, kcfg):
+    s = _sum_err(x, err)
+    return {"v": s}, jnp.zeros_like(s)
+
+
+def _identity_decode(cfg, payload):
+    return payload["v"]
+
+
+register_codec(Codec("identity", False, _identity_compress,
+                     _identity_decode))
+
+
+# ---------------------------------------------------------------------------
+# int8 / fp8 — hash-SR quantizers with per-chunk scales (kernel-backed)
+# ---------------------------------------------------------------------------
+
+def _make_quant(fmt: str) -> Codec:
+    def compress(cfg, x, err, key, row_offset, kcfg):
+        q, scale, resid = ops.quantize_payload(
+            x, err, fmt=fmt, key=key, row_offset=row_offset, config=kcfg)
+        return {"q": q, "scale": scale}, resid
+
+    def decode(cfg, payload):
+        return payload["q"].astype(jnp.float32) * payload["scale"]
+
+    return register_codec(Codec(fmt, True, compress, decode))
+
+
+_make_quant("int8")
+_make_quant("fp8")
+
+
+# ---------------------------------------------------------------------------
+# int4 — hash-SR quantizer, two values packed per wire byte (ref-only)
+# ---------------------------------------------------------------------------
+
+def _int4_compress(cfg, x, err, key, row_offset, kcfg):
+    s = _sum_err(x, err)
+    R, C = s.shape
+    amax = jnp.max(jnp.abs(s), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax * (1.0 / 7.0), 1.0)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (R, C), 0) \
+        + jnp.asarray(row_offset, jnp.int32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
+    bits = kref._sr_bits(jnp.asarray(key).astype(jnp.uint32),
+                         rows * C + cols)
+    u = bits.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+    q = jnp.clip(jnp.floor(s / scale + u), -7.0, 7.0).astype(jnp.int32)
+    hat = q.astype(jnp.float32) * scale
+    # pack biased nibbles ([-7,7] -> [1,15]) pairwise into uint8
+    qb = (q + 8).astype(jnp.uint8).reshape(R, C // 2, 2)
+    packed = qb[..., 0] | (qb[..., 1] << 4)
+    return {"q": packed, "scale": scale}, s - hat
+
+
+def _int4_decode(cfg, payload):
+    p = payload["q"]
+    R = p.shape[0]
+    lo = (p & jnp.uint8(0xF)).astype(jnp.int32)
+    hi = (p >> 4).astype(jnp.int32)
+    q = jnp.stack([lo, hi], axis=-1).reshape(R, -1) - 8
+    return q.astype(jnp.float32) * payload["scale"]
+
+
+register_codec(Codec("int4", False, _int4_compress, _int4_decode))
+
+
+# ---------------------------------------------------------------------------
+# topk — per-chunk magnitude sparsification (ref-only; deterministic,
+# EF carries the dropped mass)
+# ---------------------------------------------------------------------------
+
+def _topk_compress(cfg, x, err, key, row_offset, kcfg):
+    s = _sum_err(x, err)
+    R, C = s.shape
+    m = cfg.topk_m
+    _, idx = jax.lax.top_k(jnp.abs(s), m)          # (R, m), unique per row
+    vals = jnp.take_along_axis(s, idx, axis=1)
+    payload = {"v": vals, "i": idx.astype(jnp.int32)}
+    return payload, s - _topk_decode_shaped(payload, C)
+
+
+def _topk_decode_shaped(payload, C):
+    vals, idx = payload["v"], payload["i"]
+    R = vals.shape[0]
+    out = jnp.zeros((R, C), jnp.float32)
+    return out.at[jnp.arange(R)[:, None], idx].set(vals)
+
+
+def _topk_decode(cfg, payload):
+    return _topk_decode_shaped(payload, cfg.chunk)
+
+
+register_codec(Codec("topk", False, _topk_compress, _topk_decode))

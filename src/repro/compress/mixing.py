@@ -1,0 +1,117 @@
+"""Chunk-row plumbing + the dense compressed gossip mix.
+
+The codecs operate on a (rows, chunk) f32 layout with one scale per
+row; this module owns the mapping between that layout and the repo's
+node-stacked pytree leaves, plus the dense-matrix mixing step the sim
+engine uses:
+
+    out = diag(W) * x + offdiag(W) @ dequant(Q(x + e))
+    e'  = (x + e) - dequant(Q(x + e))
+
+The self term always uses the node's **exact** value — matching the
+dist path, where a node never transmits (so never quantizes) its own
+shard to itself.  Row indices are global across the node stack
+(node i's rows start at ``i * rows_per_node``), so the full-array sim
+compress (row_offset 0) and a per-node dist shard compress
+(row_offset ``me * rows_per_node``) hash identical stochastic-rounding
+bits per element — pinned by tests/test_compress_dist.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import sr_key
+
+from .codecs import get_codec
+from .config import CompressionConfig
+
+
+def flat_to_rows(flat: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """(P,) -> (rows, chunk) f32, zero-padded.  Padding lanes quantize
+    to zero and carry zero residual, so they are dropped losslessly by
+    :func:`rows_to_flat`."""
+    p = int(flat.shape[0])
+    rows = max(1, -(-p // chunk))
+    flat = flat.astype(jnp.float32)
+    pad = rows * chunk - p
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, chunk)
+
+
+def rows_to_flat(r2d: jnp.ndarray, n_params: int) -> jnp.ndarray:
+    """Inverse of :func:`flat_to_rows`."""
+    return r2d.reshape(-1)[:n_params]
+
+
+def leaf_to_rows(x: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """Node-stacked leaf (n, *rest) -> (n * rows_per_node, chunk) f32,
+    each node's payload zero-padded independently so per-node row
+    blocks are contiguous (global row = node * rows_per_node + row)."""
+    n = x.shape[0]
+    return jax.vmap(lambda v: flat_to_rows(v.reshape(-1), chunk))(
+        x.astype(jnp.float32)).reshape(-1, chunk)
+
+
+def rows_to_leaf(r2d: jnp.ndarray, shape: tuple) -> jnp.ndarray:
+    """Inverse of :func:`leaf_to_rows` (f32 output)."""
+    n = shape[0]
+    p = 1
+    for d in shape[1:]:
+        p *= d
+    return r2d.reshape(n, -1)[:, :p].reshape(shape)
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+def compressed_dense_mix(W: jnp.ndarray, tree, ef, cfg: CompressionConfig,
+                         t, kernel_config=None):
+    """One compressed gossip round against a dense (n, n) mixing matrix.
+
+    tree/ef are node-stacked pytrees (ef mirrors tree, or is None when
+    ``cfg.error_feedback`` is off); ``t`` is the traced step counter
+    feeding the stochastic-rounding key.  Returns ``(mixed_tree,
+    new_ef)`` with non-float leaves passed through untouched.
+    """
+    codec = get_codec(cfg.codec)
+    key = sr_key(cfg.seed, t)
+    d = jnp.diagonal(W).astype(jnp.float32)
+    Woff = W.astype(jnp.float32) - jnp.diag(d)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    ef_leaves = ([None] * len(leaves) if ef is None
+                 else treedef.flatten_up_to(ef))
+    out_leaves, new_ef_leaves = [], []
+    for x, e in zip(leaves, ef_leaves):
+        if not _is_float(x):
+            out_leaves.append(x)
+            new_ef_leaves.append(e)
+            continue
+        x2d = leaf_to_rows(x, cfg.chunk)
+        e2d = None if e is None else leaf_to_rows(e, cfg.chunk)
+        payload, resid = codec.compress(cfg, x2d, e2d, key, 0,
+                                        kernel_config)
+        hat = rows_to_leaf(codec.decode(cfg, payload), x.shape)
+        dx = d.reshape((-1,) + (1,) * (x.ndim - 1))
+        mixed = jnp.tensordot(Woff, hat, axes=(1, 0)) \
+            + dx * x.astype(jnp.float32)
+        out_leaves.append(mixed.astype(x.dtype))
+        new_ef_leaves.append(None if e is None
+                             else rows_to_leaf(resid, x.shape)
+                             .astype(e.dtype))
+    out = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    new_ef = None if ef is None \
+        else jax.tree_util.tree_unflatten(treedef, new_ef_leaves)
+    return out, new_ef
+
+
+def init_ef(params, cfg: "CompressionConfig | None"):
+    """Zero EF21 residual tree mirroring ``params`` float leaves (None
+    when compression is off or error feedback is disabled)."""
+    if cfg is None or not cfg.error_feedback:
+        return None
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, jnp.float32) if _is_float(x) else x,
+        params)

@@ -30,6 +30,23 @@ leaves (step counters, masks riding in method state trees) pass through
 unchanged: a weighted average is meaningless for them, and the
 historical float32 round-trip silently corrupted values outside f32's
 exact-integer range.
+
+Compressed gossip (``compression=`` — repro.compress, DESIGN.md
+Sec. 13): each float leaf's shard is packed to the codec's (rows,
+chunk) layout and quantized ONCE per step, outside the round switch
+(the payload depends on the step's stochastic-rounding key, not the
+round), and the per-round ``ppermute``\\ s move the **payload** arrays —
+int8 / fp8-e4m3 / packed-int4 values plus one f32 scale per chunk row,
+or top-k (value, index) pairs — so the on-wire bytes shrink by the
+codec's ratio.  The combine dequantizes received payloads against the
+node's own EXACT buffer via ``ops.quantized_gossip_mix`` (fused Pallas
+kernel at the same variadic-slots insertion point as the uncompressed
+path) for the int8/fp8 codecs, or decode+accumulate for the rest.  The
+EF21 residual rides next to the tree through the same shard_map.  The
+stochastic-rounding hash is indexed by GLOBAL row (``me * rows``), so
+on a node-only mesh the payload bits match the dense simulation
+bit-for-bit; tensor-parallel meshes chunk per shard instead (same
+semantics, different grouping).
 """
 from __future__ import annotations
 
@@ -41,8 +58,11 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.compress import flat_to_rows, get_codec, rows_to_flat
+from repro.compress import resolve as resolve_compression
 from repro.core.ppermute_plan import RoundPlan, SchedulePlan
 from repro.kernels import ops
+from repro.kernels.ref import sr_key
 
 
 def _round_body(rp: RoundPlan, axis: str, me, kcfg: ops.KernelConfig):
@@ -76,9 +96,42 @@ def _round_body(rp: RoundPlan, axis: str, me, kcfg: ops.KernelConfig):
     return body_fused if kcfg.use_pallas else body_ref
 
 
+def _round_body_compressed(rp: RoundPlan, axis: str, me,
+                           kcfg: ops.KernelConfig, codec, ccfg):
+    """Per-shard compressed mixing for one round: ppermute the payload
+    arrays per slot and combine against the node's own exact buffer."""
+    w_self = jnp.asarray(rp.self_weight, jnp.float32)[me]
+
+    def body(owns, payloads):
+        ws = [jnp.asarray(s.recv_weight, jnp.float32)[me]
+              for s in rp.slots]
+        out = []
+        for own, pay in zip(owns, payloads):
+            recvs = [jax.tree.map(
+                lambda a, _s=s: lax.ppermute(a, axis, perm=list(_s.perm)),
+                pay) for s in rp.slots]
+            # Non-receivers of a partial permutation get all-zero
+            # payloads from ppermute; they decode to zero and carry
+            # recv weight 0, so the accumulate below is unaffected.
+            if codec.fused_mix:
+                out.append(ops.quantized_gossip_mix(
+                    own, [rc["q"] for rc in recvs],
+                    [rc["scale"] for rc in recvs],
+                    [w_self] + ws, config=kcfg))
+            else:
+                acc = w_self * own
+                for wr, rc in zip(ws, recvs):
+                    acc = acc + wr * codec.decode(ccfg, rc)
+                out.append(acc)
+        return out
+
+    return body
+
+
 def make_gossip_mixer(mesh, plan: SchedulePlan, axis: str, specs, *,
                       flatten: bool = False,
-                      kernel_config: ops.KernelConfig | None = None):
+                      kernel_config: ops.KernelConfig | None = None,
+                      compression=None):
     """Build ``mixer(tree, r) -> tree`` applying round ``r % len(plan)``.
 
     ``specs`` is a PartitionSpec pytree matching ``tree`` (the node-stack
@@ -88,8 +141,20 @@ def make_gossip_mixer(mesh, plan: SchedulePlan, axis: str, specs, *,
     instead of one per leaf (fewer, larger messages — better for
     latency-bound cross-pod links).  Non-float leaves are never mixed
     (module docstring); ``kernel_config`` selects the combine backend
-    and is resolved once here, at build time."""
+    and is resolved once here, at build time.
+
+    With ``compression`` (a resolved ``CompressionConfig``; identity /
+    None mean uncompressed) the mixer signature becomes
+    ``mixer(tree, r, ef, t) -> (tree, ef')`` — ``ef`` the EF21 residual
+    tree mirroring ``tree`` (or None when error feedback is off) and
+    ``t`` the step counter feeding the stochastic-rounding key."""
     kcfg = ops.resolve_config(kernel_config)
+    ccfg = resolve_compression(compression)
+    if ccfg is not None and flatten:
+        raise ValueError(
+            "flatten_gossip + compression is unsupported: the whole-tree "
+            "flat buffer would chunk across leaf boundaries, breaking "
+            "payload-bit parity with the per-leaf simulation layout")
     n_rounds = len(plan.rounds)
     axis_size = mesh.shape[axis]
     if axis_size != plan.n:
@@ -98,6 +163,8 @@ def make_gossip_mixer(mesh, plan: SchedulePlan, axis: str, specs, *,
             f"{axis_size} shards")
     if n_rounds == 0:
         raise ValueError("empty schedule plan")
+    if ccfg is not None:
+        return _make_compressed_mixer(mesh, plan, axis, specs, kcfg, ccfg)
 
     def shard_body(r, tree):
         me = lax.axis_index(axis)
@@ -129,5 +196,75 @@ def make_gossip_mixer(mesh, plan: SchedulePlan, axis: str, specs, *,
 
     def mixer(tree, r):
         return mapped(jnp.asarray(r, jnp.int32), tree)
+
+    return mixer
+
+
+def _make_compressed_mixer(mesh, plan: SchedulePlan, axis: str, specs,
+                           kcfg: ops.KernelConfig, ccfg):
+    """Compressed twin of the shard_map body above (module docstring)."""
+    codec = get_codec(ccfg.codec)
+    with_ef = ccfg.error_feedback
+    n_rounds = len(plan.rounds)
+
+    def shard_body(r, t, tree, *maybe_ef):
+        ef = maybe_ef[0] if with_ef else None
+        me = lax.axis_index(axis)
+        leaves, treedef = jax.tree.flatten(tree)
+        mixed = [jnp.issubdtype(x.dtype, jnp.inexact) for x in leaves]
+        if not any(mixed):   # nothing mixable: counters/masks pass through
+            return (tree, ef) if with_ef else tree
+        ef_leaves = treedef.flatten_up_to(ef) if with_ef \
+            else [None] * len(leaves)
+        key = sr_key(ccfg.seed, t)
+
+        # Quantize every float leaf ONCE — the payload depends on the
+        # step key, not on which of the schedule's rounds fires.
+        owns, payloads, resids = [], [], []
+        for x, e, m in zip(leaves, ef_leaves, mixed):
+            if not m:
+                continue
+            x2d = flat_to_rows(x.reshape(-1), ccfg.chunk)
+            e2d = None if e is None \
+                else flat_to_rows(e.reshape(-1), ccfg.chunk)
+            pay, resid = codec.compress(ccfg, x2d, e2d, key,
+                                        me * x2d.shape[0], kcfg)
+            owns.append(x2d)
+            payloads.append(pay)
+            resids.append(resid)
+
+        branches = [_round_body_compressed(rp, axis, me, kcfg, codec,
+                                           ccfg) for rp in plan.rounds]
+        work = lax.switch(r % n_rounds, branches, owns, payloads)
+
+        out_leaves, ef_out, it = [], [], iter(zip(work, resids))
+        for x, e, m in zip(leaves, ef_leaves, mixed):
+            if not m:
+                out_leaves.append(x)
+                ef_out.append(e)
+                continue
+            w2d, resid = next(it)
+            n_el = int(np.prod(x.shape))
+            out_leaves.append(
+                rows_to_flat(w2d, n_el).reshape(x.shape).astype(x.dtype))
+            if with_ef:
+                ef_out.append(rows_to_flat(resid, n_el)
+                              .reshape(x.shape).astype(e.dtype))
+        out = jax.tree.unflatten(treedef, out_leaves)
+        if not with_ef:
+            return out
+        return out, jax.tree.unflatten(treedef, ef_out)
+
+    in_specs = (P(), P(), specs) + ((specs,) if with_ef else ())
+    out_specs = (specs, specs) if with_ef else specs
+    mapped = shard_map(shard_body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+
+    def mixer(tree, r, ef, t):
+        r = jnp.asarray(r, jnp.int32)
+        t = jnp.asarray(t, jnp.int32)
+        if with_ef:
+            return mapped(r, t, tree, ef)
+        return mapped(r, t, tree), None
 
     return mixer

@@ -118,6 +118,10 @@ def param_partition_specs(params, rules: ShardingRules, node_axis=False):
 
     def spec_for(path, leaf):
         shape = tuple(leaf.shape)
+        if not shape:
+            # rank-0 leaves (e.g. the compressed methods' step counter)
+            # have no dim to put the node axis on: replicate.
+            return P()
         lead: list = []
         if node_axis:
             lead.append(rules.node_axis)

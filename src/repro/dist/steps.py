@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compress import CompressionConfig
+from repro.compress import resolve as resolve_compression
 from repro.core.graphs import TopologySchedule
 from repro.core.ppermute_plan import SchedulePlan
 from repro.kernels import ops
@@ -71,6 +73,12 @@ class TrainStepBundle:
     spec: TopologySpec | None = None   # canonical topology spec
     kernel_config: ops.KernelConfig | None = None
     overlap: bool = False         # gossip/backward overlap enabled?
+    # resolved gossip-payload compression (None = uncompressed)
+    compression: CompressionConfig | None = None
+    # the Method this step was traced against — callers must init the
+    # optimizer state from THIS object (its state tree depends on the
+    # compression / kernel configs baked in at factory time)
+    method: Any = None
 
 
 def make_train_step(cfg, mesh, *,
@@ -82,7 +90,8 @@ def make_train_step(cfg, mesh, *,
                     embed_lookup_replicated: bool = False,
                     batch_shapes=None, momentum: float = 0.9,
                     kernel_config: ops.KernelConfig | None = None,
-                    overlap: bool = False
+                    overlap: bool = False,
+                    compression=None
                     ) -> TrainStepBundle:
     """One DSGD-family step: per-node grads -> method update -> gossip
     round ``step % n_rounds`` over the mesh's node axis.
@@ -112,8 +121,25 @@ def make_train_step(cfg, mesh, *,
     the stack is one scan op, so intra-stack layers share one group).
     The mixing weights, per-leaf arithmetic, and reduction order are
     identical to the sequential path, so results are BIT-EXACT either
-    way (pinned by tests/test_overlap.py); only the schedule differs."""
+    way (pinned by tests/test_overlap.py); only the schedule differs.
+
+    ``compression`` (a ``CompressionConfig``, a CLI string like
+    ``"int8"``, or None) turns the gossip into quantized +
+    error-feedback payload exchange (repro.compress): the ppermutes
+    move int8/fp8/int4/topk payloads instead of f32 buffers, the
+    EF residual + step counter ride in the optimizer state, and the
+    bundle records the resolved config.  Identity resolves to None —
+    the uncompressed step, same trace.  Incompatible with ``overlap``
+    (the scalar step counter in the method state cannot be split along
+    the per-group chains) and with ``flatten_gossip`` (chunking the
+    whole-tree flat buffer would span leaf boundaries)."""
     kcfg = ops.resolve_config(kernel_config)
+    ccfg = resolve_compression(compression)
+    if ccfg is not None and overlap:
+        raise ValueError(
+            "overlap + compression is unsupported: the compressed "
+            "method's scalar step counter cannot be split along the "
+            "per-group overlap chains")
     rules = make_rules(mesh, arch_name=cfg.name, context="train")
     n = rules.n_nodes
     if isinstance(topology, Schedule):
@@ -124,7 +150,8 @@ def make_train_step(cfg, mesh, *,
     else:
         sched = as_schedule(spec_from_cli(topology, n=n, k=k))
     plan = sched.as_ppermute_plan()
-    method = make_method(method_name, momentum, kernel_config=kcfg)
+    method = make_method(method_name, momentum, kernel_config=kcfg,
+                         compression=ccfg)
 
     p_sds = node_stack_specs(M.param_specs(cfg, param_dtype), n)
     pspecs = param_partition_specs(p_sds, rules, node_axis=True)
@@ -151,8 +178,17 @@ def make_train_step(cfg, mesh, *,
     # Degenerate 1-node gossip has no communication to overlap with.
     overlap = overlap and rules.node_axis is not None
     if rules.node_axis is None:
-        def mix_round(tree, step):
-            return tree
+        if ccfg is not None:
+            def mix_round_c(tree, step, ef, t):
+                return tree, ef
+        else:
+            def mix_round(tree, step):
+                return tree
+    elif ccfg is not None:
+        mix_round_c = make_gossip_mixer(mesh, plan, rules.node_axis,
+                                        pspecs, flatten=flatten_gossip,
+                                        kernel_config=kcfg,
+                                        compression=ccfg)
     elif overlap:
         # One independent mixer per top-level parameter group: separate
         # shard_map regions -> separate collective chains the scheduler
@@ -205,6 +241,15 @@ def make_train_step(cfg, mesh, *,
                 for sk in s_k:
                     new_opt[sk][key] = s_k[sk]
             params_n, opt = new_p, new_opt
+        elif ccfg is not None:
+            # Compressed methods drive the 3-arg transport protocol:
+            # the round is selected by the jitted step argument, the
+            # stochastic-rounding key by the counter in the method
+            # state (equal from step 0, and the counter survives
+            # checkpoint restore inside the optimizer state).
+            params_n, opt = method.step(
+                params_n, grads, opt,
+                lambda tr, e, c: mix_round_c(tr, step, e, c), eta)
         else:
             params_n, opt = method.step(params_n, grads, opt,
                                         lambda t: mix_round(t, step), eta)
@@ -216,7 +261,8 @@ def make_train_step(cfg, mesh, *,
                            rules=rules,
                            schedule=sched.as_topology_schedule(), plan=plan,
                            param_shardings=psh, spec=sched.spec,
-                           kernel_config=kcfg, overlap=overlap)
+                           kernel_config=kcfg, overlap=overlap,
+                           compression=ccfg, method=method)
 
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,18 @@
 """Pallas fused kernels + pure-jnp references for the repo's memory-bound
-hot loops (gossip combine, DSGD-momentum update, flash attention).
+hot loops (gossip combine, DSGD-momentum update, flash attention,
+quantized gossip payloads).
 
 ``repro.kernels.ops`` is the only entry point consumers use: it
 dispatches per :class:`KernelConfig` (``pallas | ref | auto``) with the
 references as the semantic oracle (DESIGN.md Sec. 9)."""
 from .ops import (KernelConfig, default_kernel_config, flash_attention,
                   fused_dsgd_step, gossip_mix, pallas_shape_ok,
-                  resolve_config, sdpa, set_default_kernel_config)
+                  quantize_payload, quantized_gossip_mix, resolve_config,
+                  sdpa, set_default_kernel_config)
 
 __all__ = [
     "KernelConfig", "default_kernel_config", "set_default_kernel_config",
     "resolve_config", "pallas_shape_ok",
     "gossip_mix", "fused_dsgd_step", "flash_attention", "sdpa",
+    "quantize_payload", "quantized_gossip_mix",
 ]

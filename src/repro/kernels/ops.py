@@ -37,6 +37,8 @@ from . import ref
 from .flash_attention import flash_attention_pallas
 from .fused_dsgd import fused_dsgd_pallas
 from .gossip_mix import gossip_mix_pallas, gossip_mix_slots_pallas
+from .quantized_gossip import (quantize_ef_pallas,
+                               quantized_gossip_mix_slots_pallas)
 
 _BACKENDS = ("auto", "pallas", "ref")
 
@@ -106,6 +108,9 @@ def pallas_shape_ok(kind: str, shape: tuple[int, ...]) -> bool:
     * ``flash_attention``: ``(Tq, Tk, D)`` — any non-empty shape (the
       kernel masks ragged sequence tiles; head dims are zero-padded to
       the lane width by the wrapper).
+    * ``quantize`` / ``quantized_gossip_mix``: the (R, C) chunk-row
+      payload layout — exactly 2-D (repro.compress pads every leaf into
+      it before the call); ragged row tiles are masked in-kernel.
     """
     if any(d == 0 for d in shape):
         return False
@@ -113,6 +118,8 @@ def pallas_shape_ok(kind: str, shape: tuple[int, ...]) -> bool:
         return len(shape) >= 1
     if kind == "flash_attention":
         return len(shape) == 3
+    if kind in ("quantize", "quantized_gossip_mix"):
+        return len(shape) == 2
     raise ValueError(f"unknown kernel kind {kind!r}")
 
 
@@ -175,6 +182,59 @@ def gossip_mix(bufs, weights, *, config: KernelConfig | None = None
         out = gossip_mix_pallas(b3, weights, interpret=cfg.run_interpret)
         return out.reshape(bufs.shape[1:])
     return ref.gossip_mix_ref(bufs, weights)
+
+
+# ---------------------------------------------------------------------------
+# quantized gossip payloads (repro.compress)
+# ---------------------------------------------------------------------------
+
+QUANT_FORMATS = ("int8", "fp8")
+
+
+def quantize_payload(x, err=None, *, fmt: str, key, row_offset=0,
+                     config: KernelConfig | None = None):
+    """One-pass payload quantization for compressed gossip: per-row
+    amax scale + hash-based stochastic rounding + EF21 residual.
+
+    x: (R, C) f32 in the chunk-row layout (C = codec chunk size);
+    ``err`` is the carried error-feedback residual (added to ``x``
+    before rounding) or None; ``key`` a uint32 scalar from
+    :func:`repro.kernels.ref.sr_key`; ``row_offset`` the global index
+    of row 0 (shard callers pass ``node * rows_per_node`` so payload
+    bits match the node-stacked layout).  Returns ``(q, scale,
+    residual)`` — see :func:`repro.kernels.ref.quantize_ef_ref`.
+    """
+    cfg = resolve_config(config)
+    if fmt not in QUANT_FORMATS:
+        raise ValueError(f"fmt must be one of {QUANT_FORMATS}, got {fmt!r}")
+    if cfg.use_pallas and pallas_shape_ok("quantize", x.shape):
+        return quantize_ef_pallas(x, err, key,
+                                  jnp.asarray(row_offset, jnp.int32),
+                                  fmt=fmt, interpret=cfg.run_interpret)
+    return ref.quantize_ef_ref(x, err, key, row_offset, fmt=fmt)
+
+
+def quantized_gossip_mix(own, q_slots, scale_slots, weights, *,
+                         config: KernelConfig | None = None):
+    """Fused dequantize-and-combine for one compressed gossip round:
+    ``w[0]*own + sum_s w[s+1]*(q_s * scale_s)`` with the dequantized
+    f32 payloads never materialised (the compressed twin of
+    :func:`gossip_mix` at the same variadic-slots insertion point).
+
+    own: (R, C) f32; q_slots: S received (R, C) int8/fp8 payloads;
+    scale_slots: S received (R, 1) f32 scales; weights: (S+1,) with
+    the self weight first.  Returns (R, C) f32.
+    """
+    cfg = resolve_config(config)
+    q_slots, scale_slots = list(q_slots), list(scale_slots)
+    w = jnp.stack([jnp.asarray(x, jnp.float32) for x in weights]) \
+        if isinstance(weights, (list, tuple)) else weights
+    if q_slots and cfg.use_pallas \
+            and pallas_shape_ok("quantized_gossip_mix", own.shape):
+        return quantized_gossip_mix_slots_pallas(
+            own, tuple(q_slots), tuple(scale_slots), w,
+            interpret=cfg.run_interpret)
+    return ref.quantized_gossip_mix_ref(own, q_slots, scale_slots, w)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,138 @@
+"""Pallas TPU kernels for quantized gossip payloads (repro.compress).
+
+A compressed gossip round is two single-pass kernels instead of the
+five-plus HBM sweeps of the unfused chain (add residual / amax / scale /
+round / subtract, then dequantize / scale / accumulate per slot):
+
+* :func:`quantize_ef_pallas` reads the node's f32 buffer once and, in
+  the same pass, computes the per-chunk-row amax scale, stochastically
+  rounds to the wire format (int8 or fp8-e4m3), and writes the EF21
+  residual ``s - dequant(q)``.  The rounding noise is a deterministic
+  per-element hash (``repro.kernels.ref._sr_bits``) of the global
+  element index — no PRNG operand, so the sim and dist paths emit
+  identical payload bits.
+* :func:`quantized_gossip_mix_slots_pallas` dequantizes each received
+  payload and combines it with the node's own (exact) buffer in one
+  pass: ``out = w[0]*own + sum_s w[s+1]*(q_s * scale_s)``.  The
+  dequantized f32 payloads are never materialised in HBM — this is the
+  compressed twin of ``gossip_mix_slots_pallas`` and sits at the same
+  variadic-slots insertion point in ``repro.dist.gossip``.
+
+Layout: payloads are (R, C) with C = the CompressionConfig chunk size,
+one f32 scale per row.  The grid is 1-D over rows and C is never tiled,
+so the per-row amax is a single in-block reduction.  Ragged row edges
+are masked in-kernel (same contract as gossip_mix.py): out-of-range
+lanes are forced to benign values before the (dropped) out-of-bounds
+write.  The elementwise math is imported from ``ref.py`` so the kernel
+blocks and the full-array references share it verbatim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import _SR_INV_QMAX, _quantize_core, _sr_bits
+
+_PAYLOAD_DTYPE = {"int8": jnp.int8, "fp8": jnp.float8_e4m3fn}
+
+
+def _row_ids(block_shape, i):
+    """Local row-index grid for the i-th row tile."""
+    br, bc = block_shape
+    return jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0) + i * br
+
+
+def _quantize_ef_kernel(key_ref, off_ref, *refs, n_rows, fmt, with_err):
+    if with_err:
+        x_ref, e_ref, q_ref, s_ref, err_ref = refs
+    else:
+        x_ref, q_ref, s_ref, err_ref = refs
+    i = pl.program_id(0)
+    br, C = x_ref.shape
+    s = x_ref[...].astype(jnp.float32)
+    if with_err:
+        s = s + e_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(s), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax * _SR_INV_QMAX[fmt], 1.0)
+    rows = _row_ids((br, C), i)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (br, C), 1)
+    bits = _sr_bits(key_ref[0], (rows + off_ref[0]) * C + cols)
+    q, hat = _quantize_core(s, scale, bits, fmt)
+    mask = rows < n_rows
+    q_ref[...] = jnp.where(mask, q, jnp.zeros_like(q))
+    s_ref[...] = jnp.where(rows[:, :1] < n_rows, scale, 1.0)
+    err_ref[...] = jnp.where(mask, s - hat, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block_r", "interpret"))
+def quantize_ef_pallas(x: jnp.ndarray, err: jnp.ndarray | None, key,
+                       row_offset, *, fmt: str, block_r: int = 256,
+                       interpret: bool = False):
+    """x: (R, C) f32 (+ optional EF residual err, same shape) ->
+    (q (R, C) int8/fp8, scale (R, 1) f32, residual (R, C) f32).
+    Semantics: :func:`repro.kernels.ref.quantize_ef_ref`."""
+    R, C = x.shape
+    block_r = min(block_r, R)
+    with_err = err is not None
+    vec = pl.BlockSpec((block_r, C), lambda i: (i, 0))
+    one = pl.BlockSpec((1,), lambda i: (0,))
+    args = [jnp.asarray(key).astype(jnp.uint32).reshape(1),
+            jnp.asarray(row_offset, jnp.int32).reshape(1), x]
+    in_specs = [one, one, vec]
+    if with_err:
+        args.append(err)
+        in_specs.append(vec)
+    return pl.pallas_call(
+        functools.partial(_quantize_ef_kernel, n_rows=R, fmt=fmt,
+                          with_err=with_err),
+        grid=(pl.cdiv(R, block_r),),
+        in_specs=in_specs,
+        out_specs=(vec, pl.BlockSpec((block_r, 1), lambda i: (i, 0)), vec),
+        out_shape=(jax.ShapeDtypeStruct((R, C), _PAYLOAD_DTYPE[fmt]),
+                   jax.ShapeDtypeStruct((R, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((R, C), jnp.float32)),
+        interpret=interpret,
+    )(*args)
+
+
+def _qmix_slots_kernel(w_ref, *refs, n_rows, n_slots):
+    own_ref = refs[0]
+    q_refs = refs[1:1 + n_slots]
+    s_refs = refs[1 + n_slots:1 + 2 * n_slots]
+    out_ref = refs[-1]
+    acc = w_ref[0] * own_ref[...].astype(jnp.float32)
+    for s in range(n_slots):  # S is static and tiny -> unrolled
+        acc = acc + w_ref[s + 1] * (q_refs[s][...].astype(jnp.float32)
+                                    * s_refs[s][...])
+    rows = _row_ids(out_ref.shape, pl.program_id(0))
+    out_ref[...] = jnp.where(rows < n_rows, acc, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def quantized_gossip_mix_slots_pallas(own: jnp.ndarray, q_slots,
+                                      scale_slots, weights: jnp.ndarray,
+                                      *, block_r: int = 256,
+                                      interpret: bool = False
+                                      ) -> jnp.ndarray:
+    """own: (R, C) f32; q_slots: S (R, C) int8/fp8 payloads;
+    scale_slots: S (R, 1) f32; weights: (S+1,) w_self first -> (R, C)
+    f32.  Semantics: :func:`repro.kernels.ref.quantized_gossip_mix_ref`.
+    """
+    q_slots, scale_slots = tuple(q_slots), tuple(scale_slots)
+    R, C = own.shape
+    S = len(q_slots)
+    block_r = min(block_r, R)
+    vec = pl.BlockSpec((block_r, C), lambda i: (i, 0))
+    col = pl.BlockSpec((block_r, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_qmix_slots_kernel, n_rows=R, n_slots=S),
+        grid=(pl.cdiv(R, block_r),),
+        in_specs=[pl.BlockSpec((S + 1,), lambda i: (0,)), vec]
+        + [vec] * S + [col] * S,
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(weights.astype(jnp.float32), own, *q_slots, *scale_slots)

@@ -147,3 +147,125 @@ def _softmax(logits: jnp.ndarray) -> jnp.ndarray:
     e = jnp.exp(logits - m)
     s = jnp.sum(e, axis=-1, keepdims=True)
     return e / jnp.maximum(s, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# quantized gossip payloads (repro.compress)
+#
+# The stochastic-rounding noise is a deterministic per-element hash of
+# (key, global element index) rather than a PRNG operand: the simulation
+# engine (full node-stacked arrays, row_offset=0) and the distributed
+# shard path (per-shard rows, row_offset=node*rows_per_node) then produce
+# IDENTICAL payload bits for the same key, which is what makes the
+# sim-vs-dist parity tests exact at the payload level.  The same helpers
+# are imported by the Pallas kernel (repro.kernels.quantized_gossip) so
+# kernel blocks and these full-array references share the math verbatim.
+# ---------------------------------------------------------------------------
+
+# per-format max representable magnitude the per-chunk scale maps amax
+# to.  _SR_INV_QMAX is the pre-rounded f32 reciprocal: the scale is
+# computed as an explicit multiply (never ``amax / QMAX``) because XLA
+# strength-reduces constant divisions to reciprocal multiplies in SOME
+# lowerings (shape/fusion dependent) — an explicit constant multiply is
+# the only form that produces identical scale bits in the Pallas
+# kernel, the interpret-mode kernel, and these references.
+_SR_QMAX = {"int8": 127.0, "fp8": 448.0}
+_SR_INV_QMAX = {"int8": 1.0 / 127.0, "fp8": 1.0 / 448.0}
+
+
+def sr_key(seed, t) -> jnp.ndarray:
+    """Fold (codec seed, step counter) into one uint32 hash key.  ``t``
+    may be a traced scalar; the ``| 1`` keeps the key nonzero so the
+    per-element hash never degenerates to a pure index hash."""
+    s = jnp.asarray(seed).astype(jnp.uint32)
+    tt = jnp.asarray(t).astype(jnp.uint32)
+    return ((s * jnp.uint32(0x9E3779B1)) ^ (tt * jnp.uint32(0x85EBCA77))) \
+        | jnp.uint32(1)
+
+
+def _sr_bits(key, idx) -> jnp.ndarray:
+    """murmur3-finalizer-style uint32 hash of a per-element index grid."""
+    h = idx.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+    h = h ^ key
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _quantize_core(s, scale, bits, fmt: str):
+    """Elementwise payload math shared by the Pallas kernel blocks and
+    the full-array reference: returns ``(q, hat)`` with ``hat`` the
+    dequantized f32 value ``q * scale``.
+
+    * ``int8``: unbiased stochastic rounding ``floor(v + u)`` with
+      ``u in [0, 1)`` from the hash bits.
+    * ``fp8`` (e4m3fn): stochastic rounding by injecting 20 hash bits
+      below the 3-bit target mantissa and truncating — exact for values
+      in fp8's normal range; the final cast handles the subnormal tail
+      (round-to-nearest there, documented in DESIGN.md Sec. 13).  The
+      clip to +-448 keeps a rounded-up max from overflowing e4m3fn's
+      finite range (448 is its largest finite value; 480 encodes NaN).
+    """
+    v = s / scale
+    if fmt == "int8":
+        u = bits.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+        q = jnp.clip(jnp.floor(v + u), -127.0, 127.0).astype(jnp.int8)
+    elif fmt == "fp8":
+        b = jax.lax.bitcast_convert_type(v, jnp.uint32)
+        b = (b + (bits & jnp.uint32(0xFFFFF))) & jnp.uint32(0xFFF00000)
+        w = jnp.clip(jax.lax.bitcast_convert_type(b, jnp.float32),
+                     -448.0, 448.0)
+        q = w.astype(jnp.float8_e4m3fn)
+    else:
+        raise ValueError(f"unknown quantize format {fmt!r}")
+    return q, q.astype(jnp.float32) * scale
+
+
+def quantize_ef_ref(x: jnp.ndarray, err: jnp.ndarray | None, key,
+                    row_offset, *, fmt: str):
+    """Quantize one (R, C) chunk-row layout buffer with per-row scales
+    and produce the EF21 residual in the same pass.
+
+    x:   (R, C) — the values to transmit (C = the codec chunk size).
+    err: (R, C) or None — carried error-feedback residual, added to x
+         before quantization (``s = x + err``).
+    key: uint32 scalar from :func:`sr_key`.
+    row_offset: global index of row 0 (per-shard callers pass
+         ``node * rows_per_node`` so bits match the stacked layout).
+    returns (q, scale, residual): q (R, C) int8/fp8, scale (R, 1) f32,
+         residual (R, C) f32 = s - dequant(q) (exact EF update).
+    """
+    x = x.astype(jnp.float32)
+    s = x if err is None else x + err.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(s), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0.0, amax * _SR_INV_QMAX[fmt], 1.0)
+    R, C = s.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (R, C), 0) \
+        + jnp.asarray(row_offset, jnp.int32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (R, C), 1)
+    bits = _sr_bits(jnp.asarray(key).astype(jnp.uint32), rows * C + cols)
+    q, hat = _quantize_core(s, scale, bits, fmt)
+    return q, scale, s - hat
+
+
+def quantized_gossip_mix_ref(own: jnp.ndarray, q_slots, scale_slots,
+                             weights) -> jnp.ndarray:
+    """Dequantize-and-combine oracle for one compressed gossip round:
+
+        out = w[0] * own + sum_s w[s+1] * (q_s * scale_s)
+
+    own: (R, C) f32 — the node's own exact values (never quantized:
+         matches the dist path where a node's own shard is not
+         transmitted); q_slots: S received payloads (R, C) int8/fp8;
+    scale_slots: S received (R, 1) f32 scales; weights: (S+1,) with
+    w_self first.  Accumulation order matches the Pallas kernel.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    acc = w[0] * own.astype(jnp.float32)
+    for i, (q, sc) in enumerate(zip(q_slots, scale_slots)):
+        acc = acc + w[i + 1] * (q.astype(jnp.float32)
+                                * sc.astype(jnp.float32))
+    return acc

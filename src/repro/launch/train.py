@@ -44,6 +44,11 @@ def main() -> None:
     ap.add_argument("--overlap", action="store_true",
                     help="overlap gossip with the method update / "
                          "backward tail (bit-exact vs sequential)")
+    ap.add_argument("--compress", default=None,
+                    help="gossip payload codec: identity|int8|fp8|int4|"
+                         "topk, or an inline CompressionConfig JSON, "
+                         "e.g. '{\"codec\":\"topk\",\"topk_frac\":0.1}' "
+                         "(repro.compress; identity == uncompressed)")
     add_distributed_args(ap)
     args = ap.parse_args()
 
@@ -65,7 +70,6 @@ def main() -> None:
     from repro.models import model as M
     from repro.models.frontends import (stub_audio_frontend,
                                         stub_vision_frontend)
-    from repro.optim.decentralized import make_method
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -83,10 +87,18 @@ def main() -> None:
                              method_name=args.method, eta=args.eta,
                              param_dtype=dtype, remat=not args.reduced,
                              flatten_gossip=args.flatten_gossip,
-                             overlap=args.overlap)
+                             overlap=args.overlap,
+                             compression=args.compress)
     n = bundle.n_nodes
     print(f"topology spec: {bundle.spec.to_json()} "
           f"({bundle.n_rounds} rounds)")
+    if bundle.compression is not None:
+        nparams = sum(
+            int(np.prod(s.shape)) for s in
+            jax.tree.leaves(M.param_specs(cfg, dtype)))
+        print(f"compressed gossip: {bundle.compression.to_json()} "
+              f"({bundle.compression.compression_ratio(nparams):.2f}x "
+              f"fewer wire bytes/message)")
     assert args.batch % n == 0
     b = args.batch // n
 
@@ -94,7 +106,10 @@ def main() -> None:
     params = M.init(cfg, key, dtype)
     params_n = jax.tree.map(
         lambda p: jnp.broadcast_to(p[None], (n,) + p.shape) + 0.0, params)
-    opt = make_method(args.method).init(params_n)
+    # Init from the bundle's own Method: its state tree depends on the
+    # kernel/compression configs baked in at factory time (a fresh
+    # make_method here would miss --compress).
+    opt = bundle.method.init(params_n)
 
     def mk_batch(step):
         raw = token_batches(step, batch=n * b, seq=args.seq,

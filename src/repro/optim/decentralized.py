@@ -15,6 +15,14 @@ matrix directly — matrices are auto-wrapped); in the distributed runtime
 it is the compiled collective-permute plan (repro.dist.gossip), possibly
 with lazy self-averaging.  Methods never see the transport.
 
+Compressed gossip (repro.compress, DESIGN.md Sec. 13): pass a resolved
+``CompressionConfig`` to :func:`make_method` and the DSGD/DSGD-momentum
+step mixes quantized payloads instead, carrying the EF21 residual tree
+and a step counter (the stochastic-rounding key) in the method state.
+A compressed method calls its transport mixer with the 3-arg protocol
+``mixer(tree, ef, t) -> (mixed, ef')``; dense matrices route through
+:func:`repro.compress.compressed_dense_mix`.
+
 Contract required by the scan/sweep engine (repro.sim): ``init`` and
 ``step`` must be pure and trace-safe, and the state pytree structure
 returned by ``step`` must equal the one from ``init`` for every step —
@@ -35,6 +43,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.compress import CompressionConfig, compressed_dense_mix, init_ef
+from repro.compress import resolve as resolve_compression
 from repro.kernels import ops
 from repro.kernels.ops import KernelConfig
 
@@ -63,6 +73,13 @@ class Method:
     # single-mix methods — gradient tracking declares 2 and is rejected
     # up front for delay/Byzantine regimes (DESIGN.md Sec. 11).
     mixes_per_step: int = 1
+    # Gossip payload compression (repro.compress).  Always the RESOLVED
+    # value — None means the uncompressed code path (the identity codec
+    # canonicalizes to None in make_method, so an identity run shares
+    # the uncompressed Method object and hence its compiled trace).  A
+    # compressed method expects the 3-arg transport-mixer protocol and
+    # carries "ef"/"ct" in its state.
+    compression: CompressionConfig | None = None
 
 
 def _as_mixer(w_or_fn) -> Callable:
@@ -103,11 +120,18 @@ def _zeros_like(tree):
 # ---------------------------------------------------------------------------
 
 def DSGD(momentum: float = 0.0,
-         kernel_config: KernelConfig | None = None) -> Method:
+         kernel_config: KernelConfig | None = None,
+         compression: CompressionConfig | None = None) -> Method:
     cfg = ops.resolve_config(kernel_config)
+    ccfg = compression  # resolved by make_method; None == uncompressed
 
     def init(params_n):
-        return {"u": _zeros_like(params_n)} if momentum else {}
+        state = {"u": _zeros_like(params_n)} if momentum else {}
+        if ccfg is not None:
+            state["ct"] = jnp.int32(0)
+            if ccfg.error_feedback:
+                state["ef"] = init_ef(params_n, ccfg)
+        return state
 
     def step_ref(params_n, grads_n, state, W, eta):
         mixer = _as_mixer(W)
@@ -137,9 +161,52 @@ def DSGD(momentum: float = 0.0,
         u = jax.tree.unflatten(tdef, [p[1] for p in pairs])
         return mixer(half), {"u": u}
 
-    step = step_fused if momentum and cfg.use_pallas else step_ref
+    def _fused_half(params_n, grads_n, state, eta):
+        """Momentum half-step via the fused kernel with pre_scale 1 —
+        the diag-fold trick is incompatible with quantization (payload
+        bits must be of the true half values, not d-scaled ones)."""
+        leaves_x, tdef = jax.tree.flatten(params_n)
+        pairs = [ops.fused_dsgd_step(x, u, g, momentum, eta, 1.0,
+                                     config=cfg)
+                 for x, u, g in zip(leaves_x,
+                                    jax.tree.leaves(state["u"]),
+                                    jax.tree.leaves(grads_n))]
+        return (jax.tree.unflatten(tdef, [p[0] for p in pairs]),
+                jax.tree.unflatten(tdef, [p[1] for p in pairs]))
+
+    def step_compressed(params_n, grads_n, state, W, eta):
+        if momentum:
+            if cfg.use_pallas:
+                half, u = _fused_half(params_n, grads_n, state, eta)
+            else:
+                u = jax.tree.map(lambda u, g: momentum * u + g,
+                                 state["u"], grads_n)
+                half = jax.tree.map(lambda x, uu: x - eta * uu,
+                                    params_n, u)
+            new_state = {"u": u}
+        else:
+            half = jax.tree.map(lambda x, g: x - eta * g, params_n,
+                                grads_n)
+            new_state = {}
+        ef = state.get("ef")
+        ct = state["ct"]
+        if callable(W):
+            mixed, ef2 = W(half, ef, ct)     # 3-arg transport protocol
+        else:
+            mixed, ef2 = compressed_dense_mix(W, half, ef, ccfg, ct, cfg)
+        new_state["ct"] = ct + 1
+        if ccfg.error_feedback:
+            new_state["ef"] = ef2
+        return mixed, new_state
+
+    if ccfg is not None:
+        step = step_compressed
+    elif momentum and cfg.use_pallas:
+        step = step_fused
+    else:
+        step = step_ref
     return Method("dsgd" + (f"m{momentum}" if momentum else ""), init,
-                  step, kernel_config=cfg)
+                  step, kernel_config=cfg, compression=ccfg)
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +297,8 @@ METHOD_NAMES = ("dsgd", "dsgdm", "qg-dsgdm", "d2", "gt")
 
 
 def make_method(name: str, momentum: float = 0.9,
-                kernel_config: KernelConfig | None = None) -> Method:
+                kernel_config: KernelConfig | None = None,
+                compression=None) -> Method:
     """Build (and memoize) a method.  Methods are stateless frozen
     closures, so returning the same object for the same arguments lets
     ``jax.jit`` caches keyed on the method (the scan engine, the sweep
@@ -243,17 +311,30 @@ def make_method(name: str, momentum: float = 0.9,
     is keyed on the concrete config: flipping the default between two
     runs yields a different Method (hence fresh jit entries downstream)
     instead of silently reusing executables traced for the old
-    backend."""
-    return _make_method(name, momentum, ops.resolve_config(kernel_config))
+    backend.
+
+    ``compression`` (a ``CompressionConfig``, a CLI string like
+    ``"int8"``, or None) selects quantized + error-feedback gossip for
+    DSGD/DSGD-momentum.  It canonicalizes BEFORE the memo lookup too —
+    None and the identity codec both resolve to None, so an
+    identity-codec run IS the uncompressed Method object (same compiled
+    trace, bit-exactness by construction)."""
+    return _make_method(name, momentum, ops.resolve_config(kernel_config),
+                        resolve_compression(compression))
 
 
 @lru_cache(maxsize=None)
-def _make_method(name: str, momentum: float,
-                 kernel_config: KernelConfig) -> Method:
+def _make_method(name: str, momentum: float, kernel_config: KernelConfig,
+                 compression: CompressionConfig | None) -> Method:
+    if compression is not None and name not in ("dsgd", "dsgdm"):
+        raise ValueError(
+            f"gossip compression is implemented for dsgd/dsgdm only; "
+            f"{name!r} mixes auxiliary state (momentum/tracker trees) "
+            f"whose quantization semantics are not part of this repro")
     if name == "dsgd":
-        return DSGD(0.0, kernel_config)
+        return DSGD(0.0, kernel_config, compression)
     if name == "dsgdm":
-        return DSGD(momentum, kernel_config)
+        return DSGD(momentum, kernel_config, compression)
     if name == "qg-dsgdm":
         return QGDSGDm(momentum)
     if name == "d2":

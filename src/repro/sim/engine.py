@@ -218,6 +218,11 @@ def check_failure_method(failure: FailureModel, method: Method) -> None:
             f"failure model with delay/Byzantine behaviors requires a "
             f"method that mixes once per step; {method.name!r} declares "
             f"mixes_per_step={method.mixes_per_step}")
+    if method.compression is not None:
+        raise ValueError(
+            "failure models do not compose with compressed gossip: the "
+            "failure mixer closures intercept raw trees and know nothing "
+            "of the EF residual / payload protocol (DESIGN.md Sec. 13)")
 
 
 def _scan_run_failure(params_n, Ws, idx, mask, batches_st, ts, *,

@@ -1,0 +1,488 @@
+"""repro.compress — config semantics, codec conformance, chunk-row
+plumbing, byte accounting and the sim-path integration (DESIGN.md
+Sec. 13).
+
+The single-device half of the compression test surface; the shard_map
+mixer, wire parity and the fused Pallas mix counter live in
+tests/test_compress_dist.py.  This file also runs in the kernels CI
+lane: the int8/fp8 quantizers are checked BITWISE between the pure-jnp
+reference and the Pallas kernel in interpret mode (payload bits are
+part of the wire contract, not an implementation detail).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import (CODEC_NAMES, CODECS, CompressionConfig,
+                            compressed_dense_mix, flat_to_rows, get_codec,
+                            init_ef, leaf_to_rows, resolve, rows_to_flat,
+                            rows_to_leaf)
+from repro.kernels import ops
+from repro.kernels.ops import KernelConfig
+from repro.kernels.ref import _sr_bits, sr_key
+from repro.optim.decentralized import make_method
+from repro.sim.engine import check_failure_method
+from repro.sim.failure import FailureModel
+from repro.topology import TopologySpec, build_schedule
+
+REF = KernelConfig(backend="ref")
+PALLAS = KernelConfig(backend="pallas", interpret=True)
+
+QUANT_CODECS = ("int8", "fp8")          # kernel-backed, fused-mix capable
+LOSSY_CODECS = ("int8", "fp8", "int4", "topk")
+
+
+def _rng_rows(r, c, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((r, c)), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# CompressionConfig: hashing, serialization, validation, resolve
+# ---------------------------------------------------------------------------
+
+def test_config_is_frozen_hashable_and_roundtrips():
+    cfg = CompressionConfig(codec="topk", chunk=128, topk_frac=0.1,
+                            error_feedback=False, seed=3)
+    assert hash(cfg) == hash(CompressionConfig.from_json(cfg.to_json()))
+    assert CompressionConfig.from_dict(cfg.to_dict()) == cfg
+    assert cfg != CompressionConfig(codec="topk", chunk=128)
+    with pytest.raises(Exception):
+        cfg.chunk = 64   # frozen
+    # distinct configs -> distinct hashes in the common cases (they ride
+    # in jit cache keys, so collisions across codecs would be silent
+    # recompile sharing)
+    assert len({CompressionConfig(codec=c) for c in CODEC_NAMES}) \
+        == len(CODEC_NAMES)
+
+
+def test_config_from_cli_forms():
+    assert CompressionConfig.from_cli(None) is None
+    assert CompressionConfig.from_cli("") is None
+    assert CompressionConfig.from_cli("none") is None
+    assert CompressionConfig.from_cli("NONE ") is None
+    assert CompressionConfig.from_cli("int8") == \
+        CompressionConfig(codec="int8")
+    inline = CompressionConfig.from_cli(
+        '{"codec": "topk", "topk_frac": 0.1}')
+    assert inline == CompressionConfig(codec="topk", topk_frac=0.1)
+    cfg = CompressionConfig(codec="fp8")
+    assert CompressionConfig.from_cli(cfg) is cfg
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="codec"):
+        CompressionConfig(codec="int2")
+    with pytest.raises(ValueError, match="chunk"):
+        CompressionConfig(chunk=1)
+    with pytest.raises(ValueError, match="even"):
+        CompressionConfig(codec="int4", chunk=255)
+    with pytest.raises(ValueError, match="topk_frac"):
+        CompressionConfig(codec="topk", topk_frac=0.0)
+    with pytest.raises(ValueError, match="topk_frac"):
+        CompressionConfig(codec="topk", topk_frac=1.5)
+
+
+def test_resolve_canonicalizes_identity_to_none():
+    assert resolve(None) is None
+    assert resolve("identity") is None
+    assert resolve("none") is None
+    assert resolve(CompressionConfig()) is None
+    cfg = CompressionConfig(codec="int8")
+    assert resolve(cfg) is cfg
+    assert resolve("int8") == cfg
+
+
+def test_registry_covers_config_names():
+    assert set(CODECS) == set(CODEC_NAMES)
+    assert get_codec("int8").fused_mix and get_codec("fp8").fused_mix
+    assert not get_codec("int4").fused_mix
+    with pytest.raises(ValueError, match="unknown codec"):
+        get_codec("int2")
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: wire_bytes must equal the actual payload array sizes
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_match_actual_payload_arrays():
+    """CompressionConfig.wire_bytes is the single source comm_cost and
+    the Pareto suite use — pin it to the codecs' REAL output arrays."""
+    P, chunk = 1000, 256          # non-multiple: exercises the padding
+    for name in LOSSY_CODECS:
+        cfg = CompressionConfig(codec=name, chunk=chunk)
+        x2d = flat_to_rows(_rng_rows(1, P).reshape(-1), chunk)
+        payload, _ = get_codec(name).compress(
+            cfg, x2d, None, sr_key(0, 0), 0, REF)
+        actual = sum(int(np.asarray(v).nbytes) for v in payload.values())
+        assert actual == cfg.wire_bytes(P), (name, actual,
+                                             cfg.wire_bytes(P))
+    # identity's wire bytes are the UNPADDED f32 baseline by definition
+    assert CompressionConfig().wire_bytes(P) == 4 * P
+
+
+def test_compression_ratio_headlines():
+    """The byte headline the paper-scale comm tables assert: int8 ~3.94x
+    asymptotically, int4/topk past 4x."""
+    P = 10**6
+    assert CompressionConfig(codec="int8").compression_ratio(P) >= 3.9
+    assert CompressionConfig(codec="fp8").compression_ratio(P) >= 3.9
+    assert CompressionConfig(codec="int4").compression_ratio(P) >= 7.5
+    assert CompressionConfig(codec="topk").compression_ratio(P) >= 9.0
+    # ratios are monotone-ish in P: padding overhead vanishes
+    c8 = CompressionConfig(codec="int8")
+    assert c8.compression_ratio(10**6) > c8.compression_ratio(1000)
+
+
+def test_rows_and_padding_edges():
+    cfg = CompressionConfig(codec="int8", chunk=256)
+    assert cfg.rows(1) == 1
+    assert cfg.rows(256) == 1
+    assert cfg.rows(257) == 2
+    assert CompressionConfig(codec="topk", chunk=256,
+                             topk_frac=0.001).topk_m == 1
+
+
+# ---------------------------------------------------------------------------
+# stochastic-rounding hash: deterministic, key-separated
+# ---------------------------------------------------------------------------
+
+def test_sr_hash_deterministic_and_key_dependent():
+    idx = jnp.arange(512, dtype=jnp.int32)
+    k1, k2 = sr_key(0, 1), sr_key(0, 2)
+    assert int(k1) != int(k2) and int(k1) != 0 and int(k2) != 0
+    b1 = np.asarray(_sr_bits(k1, idx))
+    assert np.array_equal(b1, np.asarray(_sr_bits(k1, idx)))
+    assert not np.array_equal(b1, np.asarray(_sr_bits(k2, idx)))
+    # seed separates keys too
+    assert int(sr_key(1, 1)) != int(k1)
+
+
+# ---------------------------------------------------------------------------
+# codec conformance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", CODEC_NAMES)
+def test_codec_ef_law(name):
+    """The EF21 contract every codec must satisfy exactly:
+    dequant(payload) + residual == x + err."""
+    cfg = CompressionConfig(codec=name, chunk=32, topk_frac=0.2)
+    x, e = _rng_rows(5, 32, 1), 0.01 * _rng_rows(5, 32, 2)
+    codec = get_codec(name)
+    for err in (None, e):
+        payload, resid = codec.compress(cfg, x, err, sr_key(7, 3), 0, REF)
+        hat = codec.decode(cfg, payload)
+        want = x if err is None else x + err
+        np.testing.assert_allclose(np.asarray(hat + resid),
+                                   np.asarray(want), atol=1e-5)
+        if name == "identity":
+            assert float(jnp.max(jnp.abs(resid))) == 0.0
+
+
+@pytest.mark.parametrize("fmt", QUANT_CODECS)
+@pytest.mark.parametrize("shape", [(1, 8), (3, 32), (7, 128), (5, 256)])
+def test_quantize_ref_vs_pallas_bitwise(fmt, shape):
+    """Payload bits are the wire contract: the Pallas quantize+EF kernel
+    (interpret mode) must agree with the reference BITWISE on q and
+    scale, and to f32 tolerance on the residual."""
+    x = _rng_rows(*shape, seed=11)
+    err = 0.1 * _rng_rows(*shape, seed=12)
+    key = sr_key(3, 9)
+    q_r, s_r, r_r = ops.quantize_payload(x, err, fmt=fmt, key=key,
+                                         row_offset=5, config=REF)
+    q_p, s_p, r_p = ops.quantize_payload(x, err, fmt=fmt, key=key,
+                                         row_offset=5, config=PALLAS)
+    assert np.array_equal(np.asarray(q_r).view(np.uint8),
+                          np.asarray(q_p).view(np.uint8))
+    assert np.array_equal(np.asarray(s_r).view(np.uint32),
+                          np.asarray(s_p).view(np.uint32))
+    np.testing.assert_allclose(np.asarray(r_r), np.asarray(r_p),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("fmt", QUANT_CODECS)
+def test_quantized_mix_ref_vs_pallas(fmt):
+    """Fused dequantize-and-combine vs the reference oracle."""
+    own = _rng_rows(6, 128, 20)
+    slots = []
+    for s in range(3):
+        q, sc, _ = ops.quantize_payload(_rng_rows(6, 128, 21 + s), None,
+                                        fmt=fmt, key=sr_key(0, s),
+                                        row_offset=0, config=REF)
+        slots.append((q, sc))
+    w = [0.4, 0.2, 0.25, 0.15]
+    ref_out = ops.quantized_gossip_mix(
+        own, [q for q, _ in slots], [sc for _, sc in slots], w, config=REF)
+    pl_out = ops.quantized_gossip_mix(
+        own, [q for q, _ in slots], [sc for _, sc in slots], w,
+        config=PALLAS)
+    np.testing.assert_allclose(np.asarray(ref_out), np.asarray(pl_out),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", LOSSY_CODECS)
+def test_row_offset_shard_consistency(name):
+    """A shard compressing its own rows with the global row_offset must
+    emit the same payload bits as the full stacked array — the invariant
+    that makes sim (full array) and dist (per-node shard) wire-compatible."""
+    cfg = CompressionConfig(codec=name, chunk=32)
+    full = _rng_rows(8, 32, 5)
+    key = sr_key(1, 4)
+    codec = get_codec(name)
+    pay_full, _ = codec.compress(cfg, full, None, key, 0, REF)
+    for lo, hi in ((0, 4), (4, 8)):
+        pay_shard, _ = codec.compress(cfg, full[lo:hi], None, key, lo, REF)
+        for k in pay_full:
+            a = np.asarray(pay_full[k][lo:hi])
+            b = np.asarray(pay_shard[k])
+            assert np.array_equal(a.view(np.uint8).reshape(-1),
+                                  b.view(np.uint8).reshape(-1)), (name, k)
+
+
+# ---------------------------------------------------------------------------
+# chunk-row plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p", [1, 5, 31, 32, 33, 300])
+def test_flat_rows_roundtrip(p):
+    x = jnp.asarray(np.random.default_rng(p).standard_normal(p),
+                    jnp.float32)
+    r2d = flat_to_rows(x, 32)
+    assert r2d.shape[1] == 32 and r2d.shape[0] == max(1, -(-p // 32))
+    np.testing.assert_array_equal(np.asarray(rows_to_flat(r2d, p)),
+                                  np.asarray(x))
+
+
+def test_leaf_rows_roundtrip_ragged():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 7, 13)),
+                    jnp.float32)
+    r2d = leaf_to_rows(x, 32)
+    # per-node blocks are contiguous: 7*13=91 -> 3 rows of 32 per node
+    assert r2d.shape == (4 * 3, 32)
+    np.testing.assert_array_equal(
+        np.asarray(rows_to_leaf(r2d, x.shape)), np.asarray(x))
+
+
+def test_padding_lanes_quantize_losslessly():
+    """Zero padding must quantize to exactly zero with zero residual, so
+    dropping the pad in rows_to_flat loses nothing."""
+    for name in LOSSY_CODECS:
+        cfg = CompressionConfig(codec=name, chunk=32)
+        x = jnp.pad(_rng_rows(1, 20, 9).reshape(-1), (0, 12)).reshape(1, 32)
+        codec = get_codec(name)
+        payload, resid = codec.compress(cfg, x, None, sr_key(0, 0), 0, REF)
+        hat = np.asarray(codec.decode(cfg, payload))
+        assert np.all(hat[:, 20:] == 0.0), name
+        assert np.all(np.asarray(resid)[:, 20:] == 0.0), name
+
+
+# ---------------------------------------------------------------------------
+# dense compressed mix (the sim engine's transport)
+# ---------------------------------------------------------------------------
+
+def _dense_W(n=8, r=0):
+    sched = build_schedule(TopologySpec(name="base", n=n, k=1))
+    return jnp.asarray(sched.W(r), jnp.float32)
+
+
+def test_compressed_dense_mix_identity_equals_plain_mix():
+    W = _dense_W()
+    tree = {"a": _rng_rows(8, 40, 1), "step": jnp.int32(3)}
+    cfg = CompressionConfig(chunk=32)   # identity codec
+    out, ef = compressed_dense_mix(W, tree, init_ef(tree, cfg), cfg, 0)
+    np.testing.assert_allclose(
+        np.asarray(out["a"]),
+        np.asarray(jnp.tensordot(W, tree["a"], axes=(1, 0))),
+        atol=1e-6)
+    assert out["step"] == tree["step"]          # non-float passthrough
+    assert float(jnp.max(jnp.abs(ef["a"]))) == 0.0
+
+
+def test_compressed_dense_mix_int8_error_is_quantization_level():
+    W = _dense_W()
+    x = _rng_rows(8, 128, 2)
+    cfg = CompressionConfig(codec="int8", chunk=32)
+    out, ef = compressed_dense_mix(W, {"a": x}, init_ef({"a": x}, cfg),
+                                   cfg, 0)
+    want = np.asarray(jnp.tensordot(W, x, axes=(1, 0)))
+    # off-diagonal mass is <= 1, per-element SR error <= scale ~ amax/127
+    np.testing.assert_allclose(np.asarray(out["a"]), want, atol=0.1)
+    assert 0.0 < float(jnp.max(jnp.abs(ef["a"]))) < 0.1
+
+
+def test_compressed_dense_mix_is_deterministic_in_t():
+    x = {"a": _rng_rows(8, 64, 3)}
+    cfg = CompressionConfig(codec="int8", chunk=32)
+    W = _dense_W()
+    o1, _ = compressed_dense_mix(W, x, None, cfg, 5)
+    o2, _ = compressed_dense_mix(W, x, None, cfg, 5)
+    o3, _ = compressed_dense_mix(W, x, None, cfg, 6)
+    np.testing.assert_array_equal(np.asarray(o1["a"]), np.asarray(o2["a"]))
+    assert not np.array_equal(np.asarray(o1["a"]), np.asarray(o3["a"]))
+
+
+def test_init_ef_shapes_and_gating():
+    params = {"w": jnp.ones((4, 3), jnp.bfloat16), "n": jnp.int32(2)}
+    ef = init_ef(params, CompressionConfig(codec="int8"))
+    assert ef["w"].dtype == jnp.float32 and ef["w"].shape == (4, 3)
+    assert float(jnp.max(jnp.abs(ef["w"]))) == 0.0
+    assert ef["n"] is params["n"]
+    assert init_ef(params, None) is None
+    assert init_ef(params, CompressionConfig(
+        codec="int8", error_feedback=False)) is None
+
+
+# ---------------------------------------------------------------------------
+# Schedule.bytes_per_node_per_round (incl. one-peer / time-varying)
+# ---------------------------------------------------------------------------
+
+def test_bytes_per_node_per_round_ring():
+    sched = build_schedule(TopologySpec(name="ring", n=8))
+    # static ring: every node sends to its 2 neighbors every round
+    assert sched.bytes_per_node_per_round(100) == pytest.approx(200.0)
+
+
+def test_bytes_per_node_per_round_one_peer_time_varying():
+    """The 1-peer schedules are the paper's headline: log2(n) rounds,
+    each moving exactly ONE message per node."""
+    sched = build_schedule(TopologySpec(name="one_peer_exp", n=8))
+    assert len(sched) == 3           # time-varying: log2(8) rounds
+    assert sched.bytes_per_node_per_round(100) == pytest.approx(100.0)
+    # and per round (not just on average): each W has exactly one
+    # off-diagonal nonzero per row
+    for r in range(len(sched)):
+        W = np.asarray(sched.W(r))
+        off = (W - np.diag(np.diag(W))) != 0
+        assert off.sum(axis=1).tolist() == [1] * 8, r
+
+
+@pytest.mark.parametrize("name,k", [("base", 1), ("base", 3),
+                                    ("exp", None)])
+def test_bytes_per_node_per_round_matches_matrices(name, k):
+    """Generic cross-check against the round matrices for time-varying
+    multi-degree schedules."""
+    sched = build_schedule(TopologySpec(name=name, n=16, k=k))
+    want = np.mean([((np.asarray(sched.W(r))
+                      - np.diag(np.diag(np.asarray(sched.W(r))))) != 0)
+                    .sum() / 16 for r in range(len(sched))])
+    assert sched.bytes_per_node_per_round(7) == pytest.approx(7 * want)
+
+
+def test_bytes_per_node_per_round_composes_with_wire_bytes():
+    """The comm_cost suite's contract: compressed bytes/node/round =
+    schedule volume x codec wire bytes, >= 3.9x smaller for int8."""
+    sched = build_schedule(TopologySpec(name="one_peer_exp", n=8))
+    P = 100_000
+    ident = sched.bytes_per_node_per_round(
+        CompressionConfig().wire_bytes(P))
+    int8 = sched.bytes_per_node_per_round(
+        CompressionConfig(codec="int8").wire_bytes(P))
+    assert ident / int8 >= 3.9
+
+
+# ---------------------------------------------------------------------------
+# Method-layer integration (sim path)
+# ---------------------------------------------------------------------------
+
+def test_identity_compression_is_the_uncompressed_method():
+    """resolve() canonicalization means an identity-codec run IS the
+    uncompressed trace — same memoized Method object, so bit-exactness
+    is by construction, not by tolerance."""
+    assert make_method("dsgd", compression="identity") \
+        is make_method("dsgd")
+    assert make_method("dsgd", compression=CompressionConfig()) \
+        is make_method("dsgd")
+    assert make_method("dsgdm", compression=None) is make_method("dsgdm")
+    assert make_method("dsgd", compression="int8") \
+        is make_method("dsgd", compression=CompressionConfig(codec="int8"))
+
+
+def test_compression_guards():
+    with pytest.raises(ValueError, match="dsgd/dsgdm"):
+        make_method("qg-dsgdm", compression="int8")
+    with pytest.raises(ValueError, match="compressed"):
+        check_failure_method(FailureModel(),
+                             make_method("dsgd", compression="int8"))
+
+
+def _lsq_setup(n=8, dim=16):
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.standard_normal((n, dim)), jnp.float32)
+    params_n = {"w": jnp.asarray(rng.standard_normal((n, dim)) * 3,
+                                 jnp.float32)}
+    sched = build_schedule(TopologySpec(name="base", n=n, k=1))
+
+    def grads(p):
+        return {"w": p["w"] - targets}
+
+    def loss(p):
+        return float(jnp.mean((p["w"] - targets) ** 2))
+
+    return params_n, sched, grads, loss
+
+
+@pytest.mark.parametrize("name", ["dsgd", "dsgdm"])
+def test_int8_ef_training_matches_uncompressed(name):
+    """int8+EF DSGD(-m) tracks the uncompressed trajectory to well under
+    1% final loss on a consensus least-squares problem."""
+    params_n, sched, grads, loss = _lsq_setup()
+    finals = {}
+    for ccfg in (None, CompressionConfig(codec="int8", chunk=32)):
+        method = make_method(name, compression=ccfg)
+        p, st = params_n, method.init(params_n)
+        for t in range(60):
+            W = jnp.asarray(sched.W(t), jnp.float32)
+            p, st = method.step(p, grads(p), st, W, 0.05)
+        finals[ccfg is None] = loss(p)
+        if ccfg is not None:
+            assert int(st["ct"]) == 60
+            assert "ef" in st
+    assert finals[False] <= finals[True] * 1.01 + 1e-8, finals
+
+
+def test_error_feedback_beats_no_feedback():
+    params_n, sched, grads, loss = _lsq_setup()
+    finals = {}
+    for ef in (True, False):
+        ccfg = CompressionConfig(codec="int4", chunk=32,
+                                 error_feedback=ef)
+        method = make_method("dsgd", compression=ccfg)
+        p, st = params_n, method.init(params_n)
+        for t in range(60):
+            W = jnp.asarray(sched.W(t), jnp.float32)
+            p, st = method.step(p, grads(p), st, W, 0.05)
+        finals[ef] = loss(p)
+    assert finals[True] <= finals[False], finals
+
+
+def test_forced_pallas_quantize_is_a_live_call_site(monkeypatch):
+    """With a forced-pallas KernelConfig the compressed sim step must
+    actually dispatch the fused quantize+EF kernel — counted via the
+    ops-module wrapper, not grep."""
+    calls = [0]
+    real = ops.quantize_ef_pallas
+
+    def counted(*a, **k):
+        calls[0] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(ops, "quantize_ef_pallas", counted)
+    params_n, sched, grads, _ = _lsq_setup()
+    method = make_method("dsgd", kernel_config=PALLAS,
+                         compression=CompressionConfig(codec="int8",
+                                                       chunk=32, seed=1))
+    st = method.init(params_n)
+    p2, _ = method.step(params_n, grads(params_n), st,
+                        jnp.asarray(sched.W(0), jnp.float32), 0.05)
+    assert calls[0] > 0
+    # and the forced-pallas step matches the reference step exactly
+    # (payload bits are bitwise-identical by the kernel contract)
+    method_ref = make_method("dsgd", kernel_config=REF,
+                             compression=CompressionConfig(codec="int8",
+                                                           chunk=32,
+                                                           seed=1))
+    p2_ref, _ = method_ref.step(params_n, grads(params_n),
+                                method_ref.init(params_n),
+                                jnp.asarray(sched.W(0), jnp.float32), 0.05)
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               np.asarray(p2_ref["w"]), atol=1e-6)
