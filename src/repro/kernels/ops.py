@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .flash_attention import flash_attention_pallas
+from .flash_attention import (flash_attention_pallas,
+                              paged_flash_attention_pallas)
 from .fused_dsgd import fused_dsgd_pallas
 from .gossip_mix import gossip_mix_pallas, gossip_mix_slots_pallas
 from .quantized_gossip import (quantize_ef_pallas,
@@ -108,6 +109,10 @@ def pallas_shape_ok(kind: str, shape: tuple[int, ...]) -> bool:
     * ``flash_attention``: ``(Tq, Tk, D)`` — any non-empty shape (the
       kernel masks ragged sequence tiles; head dims are zero-padded to
       the lane width by the wrapper).
+    * ``paged_attention``: ``(Tq, S_logical, D)`` with
+      ``S_logical = max_pages * page_size`` — same ragged/padding
+      support as ``flash_attention`` (the tail page is masked via
+      ``k_valid_len``; head dims lane-padded in the wrapper).
     * ``quantize`` / ``quantized_gossip_mix``: the (R, C) chunk-row
       payload layout — exactly 2-D (repro.compress pads every leaf into
       it before the call); ragged row tiles are masked in-kernel.
@@ -116,7 +121,7 @@ def pallas_shape_ok(kind: str, shape: tuple[int, ...]) -> bool:
         return False
     if kind in ("gossip_mix", "fused_dsgd"):
         return len(shape) >= 1
-    if kind == "flash_attention":
+    if kind in ("flash_attention", "paged_attention"):
         return len(shape) == 3
     if kind in ("quantize", "quantized_gossip_mix"):
         return len(shape) == 2
@@ -330,6 +335,46 @@ def sdpa(q, k, v, *, causal: bool = True, window=None, softcap=None,
         jnp.asarray(S if k_valid_len is None else k_valid_len, jnp.int32),
         (B,))
     return _sdpa_pallas(statics, q, k, v, q_start, k_valid)
+
+
+def paged_sdpa(q, k_pages, v_pages, block_table, *, q_start, k_valid_len,
+               causal: bool = True, window=None, softcap=None, scale=None,
+               config: KernelConfig | None = None):
+    """Paged-cache attention in the model stack's layout — the entry
+    point ``repro.models.attention`` dispatches paged decode through.
+
+    q: (B, Tq, H, hd);  k_pages, v_pages: (P, ps, KV, hd[, hd_v]) with
+    H % KV == 0;  block_table: (B, maxp) int32 (absolute positions
+    ``[j*ps, (j+1)*ps)`` of request ``b`` live at physical page
+    ``block_table[b, j]``);  q_start / k_valid_len: (B,) int32 — unlike
+    :func:`sdpa`, ``q_start`` is per-request (ragged slots are the
+    whole point of the paged layout).
+
+    ``ref`` is :func:`repro.kernels.ref.paged_sdpa_ref` (gather pages
+    to the dense view, then the grouped-attention math verbatim — BIT
+    identical to the dense path over the same cache contents); the
+    Pallas path is :func:`paged_flash_attention_pallas` with the block
+    table as a scalar-prefetch operand.  Decode/serving only: there is
+    deliberately no custom VJP — the train path never sees a paged
+    cache (the dense layout stays the train/sim default), so a paged
+    backward would be dead code with a live maintenance cost.
+    """
+    cfg = resolve_config(config)
+    _, ps, _, _ = k_pages.shape
+    maxp = block_table.shape[1]
+    if cfg.use_pallas and pallas_shape_ok(
+            "paged_attention", (q.shape[1], maxp * ps, q.shape[3])):
+        out = paged_flash_attention_pallas(
+            q.transpose(0, 2, 1, 3), k_pages, v_pages, block_table,
+            jnp.asarray(q_start, jnp.int32),
+            jnp.asarray(k_valid_len, jnp.int32), causal=causal,
+            window=window, softcap=softcap, scale=scale,
+            interpret=cfg.run_interpret)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)
+    return ref.paged_sdpa_ref(q, k_pages, v_pages, block_table,
+                              q_start=q_start, k_valid_len=k_valid_len,
+                              causal=causal, window=window,
+                              softcap=softcap, scale=scale)
 
 
 def _sdpa_pallas_fwd_call(statics, q, k, v, q_start, k_valid):

@@ -141,6 +141,62 @@ def grouped_sdpa_ref(q, k, v, *, causal=True, window=None, softcap=None,
     return out.reshape(B, Tq, H, hd_v).astype(q.dtype)
 
 
+def paged_sdpa_ref(q, k_pages, v_pages, block_table, *, q_start,
+                   k_valid_len, causal=True, window=None, softcap=None,
+                   scale=None) -> jnp.ndarray:
+    """Paged-cache attention oracle in the model stack's layout.
+
+    q: (B, Tq, H, hd);  k_pages: (P, ps, KV, hd);  v_pages:
+    (P, ps, KV, hd_v) with H % KV == 0;  block_table: (B, maxp) int32 —
+    request ``b``'s absolute positions ``[j*ps, (j+1)*ps)`` live at
+    physical page ``block_table[b, j]``.  ``q_start``: (B,) absolute
+    position of each request's first query (per-request ragged — unlike
+    :func:`grouped_sdpa_ref`'s shared scalar ``q_pos0``).
+    ``k_valid_len``: (B,) valid cache prefix, masking both retired page
+    slack and the partially filled tail page.
+
+    The oracle gathers each request's pages into the dense layout and
+    runs exactly the grouped-attention math of :func:`grouped_sdpa_ref`
+    — gathering is indexing, so against a dense cache holding the same
+    bits at the same positions the result is BIT-identical, which is
+    the dense-vs-paged acceptance contract the serve tests pin.
+    """
+    B, Tq, H, hd = q.shape
+    _, ps, KV, _ = k_pages.shape
+    hd_v = v_pages.shape[-1]
+    maxp = block_table.shape[1]
+    S = maxp * ps
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    q_start = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32), (B,))
+    k_valid = jnp.broadcast_to(jnp.asarray(k_valid_len, jnp.int32), (B,))
+    # gather the logical view: (B, maxp, ps, KV, hd) -> (B, S, KV, hd)
+    k = k_pages[block_table].reshape(B, S, KV, hd)
+    v = v_pages[block_table].reshape(B, S, KV, hd_v)
+
+    qpos = q_start[:, None] + jnp.arange(Tq)[None, :]        # (B, Tq)
+    kpos = jnp.arange(S)
+    qg = q.reshape(B, Tq, KV, G, hd)
+    logits = jnp.einsum("btkgd,bskd->btkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    m = kpos[None, None, :] < k_valid[:, None, None]         # (B, 1, S)
+    m = jnp.broadcast_to(m, (B, Tq, S))
+    if causal:
+        m = m & (kpos[None, None, :] <= qpos[:, :, None])
+    if window is not None:
+        m = m & (kpos[None, None, :] > qpos[:, :, None] - window)
+    logits = jnp.where(m[:, :, None, None, :], logits, _NEG_INF)
+    mx = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - mx)
+    out = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+    den = jnp.maximum(p.sum(-1), 1e-30)
+    out = out / den[..., None]
+    return out.reshape(B, Tq, H, hd_v).astype(q.dtype)
+
+
 def _softmax(logits: jnp.ndarray) -> jnp.ndarray:
     m = jnp.max(logits, axis=-1, keepdims=True)
     m = jnp.where(jnp.isfinite(m), m, 0.0)  # rows that are fully masked

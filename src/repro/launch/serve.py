@@ -1,6 +1,7 @@
-"""Batched serving launcher: thin CLI over ``repro.serve.make_engine``.
+"""Serving launcher: fixed-batch engine or continuous-batching frontend.
 
-Prefills a batch of prompts, then generates with the compiled decode
+Fixed-batch mode (default) is a thin CLI over ``repro.serve.make_engine``:
+prefill a batch of prompts, then generate with the compiled decode
 engine — the whole generation phase is ONE executable call (scan over
 token positions, on-device sampling), not a per-token dispatch loop.
 
@@ -8,14 +9,39 @@ token positions, on-device sampling), not a per-token dispatch loop.
         --batch 4 --prompt-len 16 --gen 8 [--sample --temperature 0.8 \
         --top-k 40] [--eos-id 1]
 
-Timing is reported honestly: the first engine call includes XLA
-compilation and is reported as such; a warm-up precedes the timed
-region, whose steady-state tokens/s is what the engine actually serves
-at.
+``--continuous`` switches to the paged continuous-batching engine
+(``repro.serve.ContinuousEngine``, DESIGN.md Sec. 14): requests stream
+in on a seeded Poisson arrival trace and are admitted into decode slots
+as they free up.
+
+    python -m repro.launch.serve --arch gemma3-1b --reduced --continuous \
+        --requests 32 --arrival-rate 0.5 --trace-seed 0 --slots 4 \
+        --page-size 8 --prompt-len 48 --gen 8
+
+EVERY shape that becomes a compile key — prompt padding, engine bucket
+list, trace prompt-length range — is derived through
+:func:`plan_shapes` from ``repro.serve.prompt_buckets`` / ``bucket_for``
+(the engine uses the same helpers), so the CLI and the engine cannot
+disagree on compile keys.  Timing is reported honestly: the first
+engine call includes XLA compilation and is reported as such; a warm-up
+precedes the timed region, whose steady-state tokens/s is what the
+engine actually serves at.
 """
 import argparse
 
 from repro.launch.env import set_host_device_count
+
+
+def plan_shapes(prompt_len: int, page_size: int = 8):
+    """Single source for the shape decisions that become compile keys:
+    the bucket list covering prompts up to ``prompt_len`` and the
+    (bucketed) padded length of a ``prompt_len`` prompt.  Both the CLI
+    and the engines route through these helpers — nothing else in the
+    launcher may invent a shape."""
+    from repro.serve import bucket_for, prompt_buckets
+    buckets = prompt_buckets(max(prompt_len, page_size),
+                             min_bucket=page_size)
+    return buckets, bucket_for(prompt_len, buckets)
 
 
 def main() -> None:
@@ -25,7 +51,9 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh-model", type=int, default=1)
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max prompt length; rounded up to the bucketed "
+                         "compile length from plan_shapes")
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--sample", action="store_true",
                     help="sample instead of greedy argmax")
@@ -37,6 +65,20 @@ def main() -> None:
                     help="stop token id (>= 0 enables the done-mask "
                          "early exit)")
     ap.add_argument("--seed", type=int, default=0)
+    # continuous-batching frontend
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching paged engine instead of the "
+                         "fixed-batch engine")
+    ap.add_argument("--requests", type=int, default=32,
+                    help="[continuous] number of requests in the trace")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="[continuous] Poisson arrivals per decode step")
+    ap.add_argument("--trace-seed", type=int, default=0,
+                    help="[continuous] seed of the arrival/prompt trace")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="[continuous] lockstep decode slots")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="[continuous] KV positions per cache page")
     args = ap.parse_args()
 
     if args.devices:
@@ -49,16 +91,11 @@ def main() -> None:
 
     from repro.configs import get_config
     from repro.models import model as M
-    from repro.models.frontends import (stub_audio_frontend,
-                                        stub_vision_frontend)
-    from repro.serve import SamplingParams, make_engine
+    from repro.serve import SamplingParams
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    nd = len(jax.devices())
-    mesh = jax.make_mesh((nd // args.mesh_model, args.mesh_model),
-                         ("data", "model"))
     dtype = jnp.float32 if args.reduced else jnp.bfloat16
 
     # Independent streams for init / prompts / frontend stubs / sampling —
@@ -67,9 +104,30 @@ def main() -> None:
     k_init, k_prompt, k_front, k_sample = jax.random.split(
         jax.random.PRNGKey(args.seed), 4)
     params = M.init(cfg, k_init, dtype)
+    sampling = SamplingParams(
+        mode="sample" if args.sample else "greedy",
+        temperature=args.temperature,
+        top_k=args.top_k if args.top_k > 0 else None)
+    eos_id = args.eos_id if args.eos_id >= 0 else None
+
+    if args.continuous:
+        _run_continuous(args, cfg, params, sampling, eos_id, dtype, k_sample)
+        return
+
+    from repro.models.frontends import (stub_audio_frontend,
+                                        stub_vision_frontend)
+    from repro.serve import make_engine
+
+    nd = len(jax.devices())
+    mesh = jax.make_mesh((nd // args.mesh_model, args.mesh_model),
+                         ("data", "model"))
+    _, padded_len = plan_shapes(args.prompt_len)
+    if padded_len != args.prompt_len:
+        print(f"prompt-len {args.prompt_len} -> bucket {padded_len} "
+              f"(compile keys come from plan_shapes)")
     B = args.batch
     npfx = 0
-    batch = {"tokens": jax.random.randint(k_prompt, (B, args.prompt_len), 0,
+    batch = {"tokens": jax.random.randint(k_prompt, (B, padded_len), 0,
                                           cfg.vocab_size)}
     if cfg.frontend == "audio":
         batch["frames"] = stub_audio_frontend(k_front, B, cfg.d_model, dtype,
@@ -79,38 +137,78 @@ def main() -> None:
                                                       dtype, patches=16)
         npfx = 16
 
-    sampling = SamplingParams(
-        mode="sample" if args.sample else "greedy",
-        temperature=args.temperature,
-        top_k=args.top_k if args.top_k > 0 else None)
     engine = make_engine(
-        cfg, mesh, batch=B, prompt_len=args.prompt_len, max_new=args.gen,
-        sampling=sampling, eos_id=args.eos_id if args.eos_id >= 0 else None,
-        prefix_len=npfx, param_dtype=dtype, cache_dtype=dtype)
+        cfg, mesh, batch=B, prompt_len=padded_len, max_new=args.gen,
+        sampling=sampling, eos_id=eos_id, prefix_len=npfx,
+        param_dtype=dtype, cache_dtype=dtype)
 
     # Warm-up call: compiles prefill + the whole generation scan.  The
     # historical launcher timed ms/token INCLUDING this first-call
     # compile, which made the steady-state number meaningless.
     t0 = time.time()
-    gen, done = engine.generate(params, batch, key=k_sample)
-    jax.block_until_ready(gen)
+    res = engine.generate_with_state(params, batch, key=k_sample)
+    jax.block_until_ready(res.tokens)
     t_compile = time.time() - t0
 
     t0 = time.time()
-    gen, done = engine.generate(params, batch, key=k_sample)
-    jax.block_until_ready(gen)
+    res = engine.generate_with_state(params, batch, key=k_sample)
+    jax.block_until_ready(res.tokens)
     dt = time.time() - t0
 
     print("generated token ids:")
-    for row in gen:
+    for row in res.tokens:
         print("  ", list(map(int, row)))
-    n_tok = B * args.gen
+    n_tok = int(res.lengths.sum())
     print(f"first call (incl. compile): {t_compile:.2f}s")
     print(f"steady state: {dt:.3f}s for {n_tok} tokens "
           f"({n_tok / dt:.1f} tok/s, {dt / args.gen * 1e3:.1f} ms/step, "
           f"batch {B}, 1 executable call for the decode phase)")
-    if args.eos_id >= 0:
-        print(f"done mask: {list(map(bool, done))}")
+    if eos_id is not None:
+        print(f"done mask: {list(map(bool, res.done))}  "
+              f"lengths: {list(map(int, res.lengths))}")
+
+
+def _run_continuous(args, cfg, params, sampling, eos_id, dtype,
+                    k_sample) -> None:
+    import time
+
+    import jax
+
+    from repro.models.model import PagedCacheLayout
+    from repro.serve import ContinuousEngine, poisson_trace
+
+    buckets, max_bucket = plan_shapes(args.prompt_len, args.page_size)
+    max_pages = -(-(max_bucket + args.gen) // args.page_size)
+    layout = PagedCacheLayout(
+        page_size=args.page_size,
+        num_pages=args.slots * max_pages + 1,   # +1: reserved scratch page
+        max_pages_per_slot=max_pages)
+    trace = poisson_trace(args.requests, rate=args.arrival_rate,
+                          seed=args.trace_seed, min_prompt=4,
+                          max_prompt=args.prompt_len,
+                          vocab_size=cfg.vocab_size)
+    engine = ContinuousEngine(
+        cfg, slots=args.slots, layout=layout, max_new=args.gen,
+        buckets=buckets, sampling=sampling, eos_id=eos_id,
+        param_dtype=dtype, cache_dtype=dtype)
+
+    t0 = time.time()
+    out = engine.run(params, trace, base_key=k_sample)
+    dt = time.time() - t0
+    s = out["stats"]
+    print(f"continuous trace: {s['requests']} requests, "
+          f"{s['generated_tokens']} tokens in {s['steps']} decode steps")
+    print(f"  executables: {s['executables']} "
+          f"(buckets used {s['buckets_used']} + 1 decode; "
+          f"bound = {len(buckets) + 1})")
+    print(f"  slot utilization: {s['slot_utilization']:.2f}  "
+          f"queue wait p50/p99: {s['wait_p50_steps']:.1f}/"
+          f"{s['wait_p99_steps']:.1f} steps")
+    print(f"  wall: {dt:.2f}s incl. compiles "
+          f"({s['generated_tokens'] / dt:.1f} tok/s)")
+    for rid in sorted(out["results"])[:4]:
+        r = out["results"][rid]
+        print(f"  req {rid}: {list(map(int, r.tokens))}")
 
 
 if __name__ == "__main__":

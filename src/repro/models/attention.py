@@ -20,6 +20,16 @@ flag read at trace time (the historical ``APPEND_FREE_DECODE`` global,
 trace-scoped by monkey-patching in ``dist/steps.py``, is gone for the
 same reason ``FORCE_PALLAS_INTERPRET`` was: a flag read at trace time
 silently poisons later traces).
+
+``decode_mode="paged"`` is the continuous-batching serve layout
+(DESIGN.md Sec. 14): the cache leaves are page *pools*
+``(num_pages, page_size, KV, hd)`` shared by every slot, an int32
+``block_table`` (B, max_pages) maps each slot's logical pages to
+physical ones, and ``cache_index`` is a (B,) vector of per-slot write
+positions instead of a scalar.  The fresh K/V is scatter-written into
+``(block_table[b, idx//ps], idx%ps)`` and attention dispatches through
+``ops.paged_sdpa`` (bit-exact with the dense path over the same cache
+contents).
 """
 from __future__ import annotations
 
@@ -32,7 +42,7 @@ from .layers import dense, dense_init, rmsnorm, rmsnorm_init, rope
 
 _NEG_INF = -1e30
 
-DECODE_MODES = ("dus", "append_free")
+DECODE_MODES = ("dus", "append_free", "paged")
 
 
 # GQA formulation: "grouped" keeps K/V at KV heads and reshapes Q to
@@ -146,7 +156,8 @@ def attn_init(key, d_model, n_heads, n_kv, head_dim, dtype, *,
 def attn_apply(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
                causal=True, window=None, softcap=None, scale=None,
                cache=None, cache_index=None, positions=None,
-               kv_override=None, decode_mode="dus", kernel_config=None):
+               kv_override=None, decode_mode="dus", block_table=None,
+               kernel_config=None):
     """x: (B, T, D).  With ``cache`` (dict k/v (B, S, KV, hd)) performs a
     decode/prefill update at ``cache_index``.  ``kv_override`` supplies
     external K/V inputs (cross-attention).  ``decode_mode`` selects the
@@ -154,7 +165,9 @@ def attn_apply(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
     cache (dynamic-update-slice) before attending; ``"append_free"``
     attends over (frozen cache, fresh token) with an LSE combine and
     returns the cache untouched (appends become the serving loop's
-    batched concern)."""
+    batched concern); ``"paged"`` treats the cache leaves as page pools
+    ``(P, ps, KV, hd)`` addressed through ``block_table`` (B, maxp) with
+    a (B,) vector ``cache_index`` of per-slot write positions."""
     if decode_mode not in DECODE_MODES:
         raise ValueError(f"decode_mode must be one of {DECODE_MODES}, got "
                          f"{decode_mode!r}")
@@ -173,13 +186,42 @@ def attn_apply(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
         xk = rmsnorm(p["k_norm"], xk)
 
     if positions is None:
-        pos0 = 0 if cache_index is None else cache_index
-        positions = pos0 + jnp.arange(T)
+        if cache_index is not None and jnp.ndim(cache_index) == 1:
+            # per-slot write positions (paged decode): rope takes (B, T)
+            positions = cache_index[:, None] + jnp.arange(T)
+        else:
+            pos0 = 0 if cache_index is None else cache_index
+            positions = pos0 + jnp.arange(T)
     if kv_override is None and rope_theta is not None:
         q = rope(q, positions, rope_theta)
         xk = rope(xk, positions, rope_theta)
 
     k_valid = None
+    if cache is not None and decode_mode == "paged":
+        if kv_override is not None:
+            raise NotImplementedError(
+                "paged decode does not support cross-attention K/V")
+        if T != 1:
+            raise ValueError("paged decode_mode is single-token (T == 1)")
+        if block_table is None:
+            raise ValueError("decode_mode='paged' requires a block_table")
+        # Scatter the fresh K/V into each slot's current tail page.  Free
+        # slots all map to the reserved scratch page (page 0, see
+        # serve.paged.PagePool) so their garbage writes never land in a
+        # live request's pages.
+        ps = cache["k"].shape[1]
+        idx = jnp.asarray(cache_index, jnp.int32)             # (B,) write pos
+        page = block_table[jnp.arange(B), idx // ps]          # (B,) physical
+        slot = idx % ps
+        k = cache["k"].at[page, slot].set(xk[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[page, slot].set(xv[:, 0].astype(cache["v"].dtype))
+        cache = {"k": k, "v": v}
+        out = ops.paged_sdpa(q, k, v, block_table, q_start=idx,
+                             k_valid_len=idx + 1, causal=causal,
+                             window=window, softcap=softcap, scale=scale,
+                             config=kernel_config)
+        y = dense(p["wo"], out.reshape(B, T, n_heads * head_dim))
+        return y, cache
     if cache is not None:
         if kv_override is None and decode_mode == "append_free" and T == 1:
             # Append-free serve step (EXPERIMENTS.md §Perf iteration A2):

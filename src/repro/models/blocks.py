@@ -57,10 +57,10 @@ def _mla_kw(cfg: ArchConfig) -> dict:
 
 def layer_apply(p: dict, x, cfg: ArchConfig, spec: LayerSpec, *,
                 cache=None, cache_index=None, enc_out=None, causal=True,
-                decode_mode="dus", kernel_config=None):
-    """Returns (x, new_cache, aux_loss).  ``decode_mode`` and
-    ``kernel_config`` are threaded down to the attention layers (mamba
-    layers ignore both)."""
+                decode_mode="dus", block_table=None, kernel_config=None):
+    """Returns (x, new_cache, aux_loss).  ``decode_mode``,
+    ``block_table`` (paged decode only) and ``kernel_config`` are
+    threaded down to the attention layers (mamba layers ignore them)."""
     aux = jnp.float32(0.0)
     h = rmsnorm(p["ln1"], x)
     if spec.kind == "attn":
@@ -77,7 +77,7 @@ def layer_apply(p: dict, x, cfg: ArchConfig, spec: LayerSpec, *,
                 causal=causal, window=spec.window, softcap=cfg.attn_softcap,
                 scale=cfg.attn_scale, cache=_sub(cache, "attn"),
                 cache_index=cache_index, decode_mode=decode_mode,
-                kernel_config=kernel_config)
+                block_table=block_table, kernel_config=kernel_config)
         if "ln1_post" in p:
             a = rmsnorm(p["ln1_post"], a)
         new_cache = {"attn": cache_a} if cache_a is not None else {}
@@ -162,7 +162,7 @@ def stack_init(key, cfg: ArchConfig, dtype) -> dict:
 
 def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
                 cache_index=None, enc_out=None, causal=True, remat=False,
-                decode_mode="dus", kernel_config=None):
+                decode_mode="dus", block_table=None, kernel_config=None):
     """caches: {"prologue": [...], "blocks": stacked-per-block pytree}."""
     aux_total = jnp.float32(0.0)
     new_pro_caches = []
@@ -172,6 +172,7 @@ def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
                                  cache=c, cache_index=cache_index,
                                  enc_out=enc_out, causal=causal,
                                  decode_mode=decode_mode,
+                                 block_table=block_table,
                                  kernel_config=kernel_config)
         new_pro_caches.append(nc)
         aux_total = aux_total + aux
@@ -189,6 +190,7 @@ def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
                                          cache_index=cache_index,
                                          enc_out=enc_out, causal=causal,
                                          decode_mode=decode_mode,
+                                         block_table=block_table,
                                          kernel_config=kernel_config)
             new_bc.append(nci)
             auxc = auxc + aux_i
@@ -204,6 +206,26 @@ def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
     return x, new_caches, aux_total
 
 
+def layer_paged_cache_init(cfg: ArchConfig, spec: LayerSpec,
+                           num_pages: int, page_size: int, dtype) -> dict:
+    """Paged-pool variant of :func:`layer_cache_init`: the cache leaves
+    keep the dense names ("k"/"v") but become page pools
+    ``(num_pages, page_size, KV, hd)`` shared by every slot through the
+    block table.  Attn-family layers only: the MLA latent cache and the
+    mamba recurrent state have no per-position K/V rows to page
+    (ROADMAP notes MLA serving stays on the dense latent cache)."""
+    if spec.kind != "attn":
+        raise NotImplementedError(
+            f"paged KV cache supports attn layers only, got {spec.kind!r}")
+    if cfg.mla is not None:
+        raise NotImplementedError(
+            "paged KV cache does not support the MLA latent cache "
+            "(dense latent layout stays the MLA serving path)")
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {"attn": {"k": jnp.zeros(shape, dtype),
+                     "v": jnp.zeros(shape, dtype)}}
+
+
 def stack_cache_init(cfg: ArchConfig, batch: int, max_seq: int, dtype,
                      enc_len: int = 0) -> dict:
     pro = [layer_cache_init(cfg, s, batch, max_seq, dtype, enc_len)
@@ -213,5 +235,21 @@ def stack_cache_init(cfg: ArchConfig, batch: int, max_seq: int, dtype,
     blocks = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (cfg.num_blocks,) + a.shape), one)
     # materialise (broadcast_to gives a view; make it writable via + 0)
+    blocks = jax.tree.map(lambda a: a + jnp.zeros((), a.dtype), blocks)
+    return {"prologue": pro, "blocks": blocks}
+
+
+def stack_paged_cache_init(cfg: ArchConfig, num_pages: int, page_size: int,
+                           dtype) -> dict:
+    """Paged-pool mirror of :func:`stack_cache_init` — same tree
+    structure (prologue leaves rank 4, stacked-blocks leaves rank 5
+    with a leading num_blocks axis), so dense->paged prefill packing is
+    a structural ``jax.tree.map``."""
+    pro = [layer_paged_cache_init(cfg, s, num_pages, page_size, dtype)
+           for s in cfg.prologue]
+    one = [layer_paged_cache_init(cfg, s, num_pages, page_size, dtype)
+           for s in cfg.pattern]
+    blocks = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_blocks,) + a.shape), one)
     blocks = jax.tree.map(lambda a: a + jnp.zeros((), a.dtype), blocks)
     return {"prologue": pro, "blocks": blocks}

@@ -12,12 +12,15 @@ the matching ShapeDtypeStructs for the dry run.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.common import ArchConfig, LayerSpec
 
-from .blocks import stack_apply, stack_cache_init, stack_init
+from .blocks import (stack_apply, stack_cache_init, stack_init,
+                     stack_paged_cache_init)
 from .layers import (chunked_ce_loss, dense_init, embed, embed_init,
                      rmsnorm, rmsnorm_init)
 
@@ -95,7 +98,7 @@ def encode(cfg: ArchConfig, params, frames, *,
 
 def backbone(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
              enc_out=None, caches=None, cache_index=None, remat=False,
-             decode_mode="dus", kernel_config=None):
+             decode_mode="dus", block_table=None, kernel_config=None):
     """Returns (hidden, new_caches, aux)."""
     x = embed(params["embed"], tokens)
     if cfg.embed_scale:
@@ -105,6 +108,7 @@ def backbone(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
     x, caches, aux = stack_apply(params["stack"], x, cfg, caches=caches,
                                  cache_index=cache_index, enc_out=enc_out,
                                  remat=remat, decode_mode=decode_mode,
+                                 block_table=block_table,
                                  kernel_config=kernel_config)
     return rmsnorm(params["final_norm"], x), caches, aux
 
@@ -154,6 +158,52 @@ def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
     return stack_cache_init(cfg, batch, max_seq, dtype)
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedCacheLayout:
+    """Static shape of a paged KV cache (DESIGN.md Sec. 14).
+
+    The pool holds ``num_pages`` pages of ``page_size`` positions each
+    (per layer); every serve slot owns up to ``max_pages_per_slot``
+    pages through its block-table row, so a slot can hold sequences up
+    to ``max_seq = max_pages_per_slot * page_size``.  Physical page 0
+    is reserved as the scratch page free slots write into
+    (``serve.paged.PagePool`` never hands it out)."""
+    page_size: int = 8
+    num_pages: int = 64
+    max_pages_per_slot: int = 8
+
+    def __post_init__(self):
+        if self.page_size < 1 or self.num_pages < 2 \
+                or self.max_pages_per_slot < 1:
+            raise ValueError(f"invalid paged layout: {self}")
+        if self.max_pages_per_slot > self.num_pages - 1:
+            raise ValueError(
+                f"max_pages_per_slot {self.max_pages_per_slot} exceeds the "
+                f"{self.num_pages - 1} allocatable pages (page 0 is the "
+                f"reserved scratch page)")
+
+    @property
+    def max_seq(self) -> int:
+        return self.max_pages_per_slot * self.page_size
+
+    def pages_for(self, n: int) -> int:
+        """Pages needed to hold ``n`` positions (ceil)."""
+        return -(-n // self.page_size)
+
+
+def init_paged_cache(cfg: ArchConfig, layout: PagedCacheLayout,
+                     dtype=jnp.bfloat16):
+    """Paged-pool caches (attn-family decoder-only models).  Same tree
+    structure as :func:`init_cache` with leaves
+    ``(num_pages, page_size, KV, hd)``; pair with a (B, max_pages)
+    int32 block table and ``decode_mode="paged"``."""
+    if cfg.encoder is not None:
+        raise NotImplementedError(
+            "paged serving does not cover encoder-decoder models")
+    return stack_paged_cache_init(cfg, layout.num_pages, layout.page_size,
+                                  dtype)
+
+
 def prefill(cfg: ArchConfig, params, batch, max_seq: int,
             cache_dtype=jnp.bfloat16, *, kernel_config=None):
     """Run the prompt through the model, filling a fresh KV cache.
@@ -176,15 +226,19 @@ def prefill(cfg: ArchConfig, params, batch, max_seq: int,
 
 
 def decode_step(cfg: ArchConfig, params, caches, tokens, index,
-                enc_out=None, *, decode_mode="dus", kernel_config=None):
+                enc_out=None, *, decode_mode="dus", block_table=None,
+                kernel_config=None):
     """One-token step.  tokens: (B, 1); index: scalar position of that
     token (cache filled for [0, index)).  ``decode_mode`` is the explicit
     cache policy threaded to the attention layers: ``"dus"`` writes the
     fresh K/V at ``index``; ``"append_free"`` attends over the frozen
-    cache + fresh token and returns the cache untouched."""
+    cache + fresh token and returns the cache untouched; ``"paged"``
+    takes a (B,) vector ``index`` of per-slot positions plus
+    ``block_table`` (B, max_pages) and scatter-writes into page pools."""
     h, caches, _ = backbone(cfg, params, tokens, enc_out=enc_out,
                             caches=caches, cache_index=index,
                             decode_mode=decode_mode,
+                            block_table=block_table,
                             kernel_config=kernel_config)
     logits = h @ _out_proj(cfg, params)
     if cfg.final_softcap is not None:

@@ -1,13 +1,23 @@
-"""Serving runtime: the compiled decode engine and on-device sampling.
+"""Serving runtime: compiled decode engines and on-device sampling.
 
 ``make_engine`` compiles prefill + the WHOLE generation phase (one
 ``lax.scan`` over token positions, sampling included) into a single
 executable per configuration — see ``repro.serve.engine`` and DESIGN.md
-Sec. 10."""
-from .engine import GenerationBundle, decode_logits_scan, make_engine
+Sec. 10.  ``ContinuousEngine`` is the continuous-batching engine over a
+paged KV cache (slot scheduler, bucketed prefill executables — DESIGN.md
+Sec. 14)."""
+from repro.models.model import PagedCacheLayout
+
+from .continuous import ContinuousEngine, RequestResult
+from .engine import (GenerationBundle, GenerationResult, decode_logits_scan,
+                     make_engine)
+from .paged import PagePool, Request, bucket_for, poisson_trace, \
+    prompt_buckets
 from .sampling import SamplingParams, sample_token
 
 __all__ = [
-    "GenerationBundle", "make_engine", "decode_logits_scan",
-    "SamplingParams", "sample_token",
+    "GenerationBundle", "GenerationResult", "make_engine",
+    "decode_logits_scan", "SamplingParams", "sample_token",
+    "ContinuousEngine", "RequestResult", "PagedCacheLayout", "PagePool",
+    "Request", "bucket_for", "poisson_trace", "prompt_buckets",
 ]

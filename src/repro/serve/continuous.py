@@ -1,0 +1,310 @@
+"""Continuous-batching serve engine over a paged KV cache.
+
+The fixed-batch engine (``serve.engine``) compiles one executable per
+``(batch, prompt_len, max_new)`` and retires the WHOLE batch when its
+last request finishes — the wrong shape for ragged production traffic.
+This engine keeps a fixed set of ``slots`` decoding in lockstep while
+requests stream through them:
+
+* **Paged KV cache** — every layer's cache is a page pool
+  ``(num_pages, page_size, KV, hd)`` shared by all slots; a slot owns
+  pages only through its row of the int32 block table.  Retiring a
+  request returns its pages to the :class:`~repro.serve.paged.PagePool`
+  free list; admission takes them back.  Physical page 0 is the
+  reserved scratch page idle slots write into (their lockstep decode
+  output is discarded on the host).
+* **Slot scheduler** — the per-step host loop admits queued requests
+  into free slots (arrival time permitting, pages permitting), runs ONE
+  batched paged decode step for all slots, then retires slots that hit
+  eos or their token budget.  The historical in-graph done-mask becomes
+  the host-side free-slot map.
+* **Bucketed prefill** — prompts are right-padded to the power-of-two
+  buckets from :func:`~repro.serve.paged.prompt_buckets` and prefilled
+  one request at a time straight into that slot's pages (the padded
+  tail writes garbage K/V that decode overwrites position-by-position
+  before ``k_valid_len`` ever exposes it).  The lifetime executable
+  count is therefore bounded by ``len(buckets) + 1`` (one prefill per
+  bucket actually seen + one decode), pinned by ``dispatch_counter``.
+* **Per-request PRNG** — streams are keyed by ``fold_in(base_key,
+  request_id)`` at admission, NOT by slot index, and each sampled
+  token folds in its absolute position; a refilled slot can never
+  reuse a retired request's stream, and a request's tokens are
+  bit-identical whether it runs alone or shares the batch
+  (tests/test_serve_continuous.py pins both).
+
+Single-host by design: admission decisions are inherently host-driven
+(one small sync per step); the distributed fixed-batch engine stays the
+multi-host path (DESIGN.md Sec. 10 vs Sec. 14).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models import model as M
+from repro.models.model import PagedCacheLayout
+
+from .paged import PagePool, Request, bucket_for, prompt_buckets
+from .sampling import SamplingParams, sample_token
+
+
+@dataclass
+class _Slot:
+    """Host-side lifecycle state of one decode slot (FREE when
+    ``rid is None`` -> PREFILL/DECODE while owned -> retired back to
+    FREE)."""
+    rid: int | None = None
+    pos: int = 0                 # next K/V write position (== length)
+    generated: int = 0
+    pages: list = field(default_factory=list)
+    admitted_step: int = 0
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    tokens: list                 # generated ids (incl. terminating eos)
+    arrival: float
+    admitted_step: int
+    finished_step: int
+
+    @property
+    def wait_steps(self) -> float:
+        """Queueing delay in virtual decode-step units."""
+        return self.admitted_step - self.arrival
+
+
+class ContinuousEngine:
+    """See module docstring.  ``run`` consumes a list of
+    :class:`~repro.serve.paged.Request` and returns per-request results
+    plus deterministic scheduler statistics."""
+
+    def __init__(self, cfg, *, slots: int, layout: PagedCacheLayout,
+                 max_new: int, buckets=None, max_prompt: int = 48,
+                 sampling: SamplingParams = SamplingParams(),
+                 eos_id: int | None = None, param_dtype=jnp.float32,
+                 cache_dtype=jnp.float32,
+                 kernel_config: ops.KernelConfig | None = None):
+        if slots < 1:
+            raise ValueError(f"need >= 1 slot, got {slots}")
+        self.cfg = cfg
+        self.slots = slots
+        self.layout = layout
+        self.max_new = max_new
+        self.buckets = tuple(buckets) if buckets is not None \
+            else prompt_buckets(max_prompt)
+        for b in self.buckets:
+            if b % layout.page_size:
+                raise ValueError(f"bucket {b} not a multiple of page_size "
+                                 f"{layout.page_size}")
+        if max(self.buckets) > layout.max_seq:
+            raise ValueError(
+                f"largest bucket {max(self.buckets)} exceeds per-slot "
+                f"capacity {layout.max_seq}")
+        self.sampling = sampling
+        self.eos_id = eos_id
+        self.cache_dtype = cache_dtype
+        self.kcfg = ops.resolve_config(kernel_config)
+        # eager init validates the arch (attn-family decoder-only) and
+        # allocates the pools once — they live across requests
+        self.pools = M.init_paged_cache(cfg, layout, cache_dtype)
+        self.page_pool = PagePool(layout.num_pages)
+        # lifetime executable registry: one prefill per bucket actually
+        # seen + one decode.  dispatch_counter counts calls per
+        # executable; num_executables is the gated compile-count model.
+        self._prefill_fns: dict[int, Any] = {}
+        self._decode_fn = None
+        self.dispatch_counter: dict[str, int] = {}
+
+    # -- executables --------------------------------------------------
+
+    @property
+    def num_executables(self) -> int:
+        return len(self._prefill_fns) + (self._decode_fn is not None)
+
+    def _get_prefill(self, bl: int):
+        """Jitted prefill-into-pages for bucket length ``bl``:
+        ``(params, pools, tokens (1, bl), prompt_len, page_idx, req_key)
+        -> (first sampled token (1,), pools)``.  ``prompt_len`` and
+        ``page_idx`` are traced, so every prompt in the bucket reuses
+        this executable."""
+        fn = self._prefill_fns.get(bl)
+        if fn is not None:
+            return fn
+        cfg, kcfg, layout = self.cfg, self.kcfg, self.layout
+        sampling, cache_dtype = self.sampling, self.cache_dtype
+        ps = layout.page_size
+        npg = bl // ps
+
+        def prefill(params, pools, tokens, prompt_len, page_idx, req_key):
+            caches = M.init_cache(cfg, 1, bl, cache_dtype)
+            h, caches, _ = M.backbone(cfg, params, tokens, caches=caches,
+                                      cache_index=0, kernel_config=kcfg)
+            # M.prefill's "last position" would be the padded row bl-1;
+            # the prompt's real last row is prompt_len-1
+            h_last = jax.lax.dynamic_index_in_dim(h, prompt_len - 1, axis=1,
+                                                  keepdims=False)   # (1, D)
+            logits = h_last @ M._out_proj(cfg, params)
+            if cfg.final_softcap is not None:
+                logits = cfg.final_softcap * jnp.tanh(
+                    logits / cfg.final_softcap)
+            keys = jax.random.fold_in(req_key, prompt_len)[None] \
+                if sampling.needs_rng else None
+            tok = sample_token(logits.astype(jnp.float32), sampling, keys)
+
+            def pack(pool, dense):
+                if dense.ndim == 4:      # prologue leaf (1, bl, KV, hd)
+                    v = dense[0].reshape((npg, ps) + dense.shape[2:])
+                    return pool.at[page_idx].set(v.astype(pool.dtype))
+                # stacked blocks leaf (nb, 1, bl, KV, hd)
+                nb = dense.shape[0]
+                v = dense[:, 0].reshape((nb, npg, ps) + dense.shape[3:])
+                return pool.at[:, page_idx].set(v.astype(pool.dtype))
+
+            return tok, jax.tree.map(pack, pools, caches)
+
+        fn = jax.jit(prefill)
+        self._prefill_fns[bl] = fn
+        self.dispatch_counter.setdefault(f"prefill_{bl}", 0)
+        return fn
+
+    def _get_decode(self):
+        """Jitted lockstep decode over ALL slots: ``(params, pools,
+        table (B, maxp), tok (B,), pos (B,), keys (B, 2)) ->
+        (next token (B,), pools)``."""
+        if self._decode_fn is not None:
+            return self._decode_fn
+        cfg, kcfg, sampling = self.cfg, self.kcfg, self.sampling
+
+        def decode(params, pools, table, tok, pos, keys):
+            logits, pools = M.decode_step(cfg, params, pools, tok[:, None],
+                                          pos, decode_mode="paged",
+                                          block_table=table,
+                                          kernel_config=kcfg)
+            skeys = jax.vmap(jax.random.fold_in)(keys, pos + 1) \
+                if sampling.needs_rng else None
+            nxt = sample_token(logits[:, -1].astype(jnp.float32), sampling,
+                               skeys)
+            return nxt, pools
+
+        self._decode_fn = jax.jit(decode)
+        self.dispatch_counter.setdefault("decode", 0)
+        return self._decode_fn
+
+    # -- scheduler ----------------------------------------------------
+
+    def run(self, params, requests, *, base_key=None,
+            max_steps: int = 100_000) -> dict:
+        """Drive the trace to completion.  Returns ``{"results":
+        {rid: RequestResult}, "stats": {...}}`` with deterministic
+        scheduler statistics (virtual time = decode-step index)."""
+        if base_key is None:
+            base_key = jax.random.PRNGKey(0)
+        layout = self.layout
+        maxp = layout.max_pages_per_slot
+        queue = deque(sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        for r in queue:
+            if r.prompt_len + self.max_new > layout.max_seq:
+                raise ValueError(
+                    f"request {r.rid}: prompt {r.prompt_len} + max_new "
+                    f"{self.max_new} exceeds slot capacity {layout.max_seq}")
+        slots = [_Slot() for _ in range(self.slots)]
+        table = np.zeros((self.slots, maxp), np.int32)   # row 0s = scratch
+        last_tok = np.zeros((self.slots,), np.int32)
+        keys = np.zeros((self.slots, 2), np.uint32)
+        toks: dict[int, list] = {}
+        results: dict[int, RequestResult] = {}
+        step = 0
+        busy_acc = 0
+
+        def retire(s: _Slot, fin_step: int):
+            self.page_pool.free(s.pages)
+            i = slots.index(s)
+            table[i] = 0
+            last_tok[i] = 0
+            keys[i] = 0
+            results[s.rid] = RequestResult(
+                rid=s.rid, tokens=toks.pop(s.rid), arrival=arrivals[s.rid],
+                admitted_step=s.admitted_step, finished_step=fin_step)
+            s.rid, s.pos, s.generated, s.pages = None, 0, 0, []
+
+        arrivals = {r.rid: r.arrival for r in queue}
+
+        while queue or any(s.rid is not None for s in slots):
+            if step >= max_steps:
+                raise RuntimeError(f"trace did not drain in {max_steps} "
+                                   f"steps")
+            # -- admission: free slots pull arrived requests ----------
+            for i, s in enumerate(slots):
+                if s.rid is not None or not queue \
+                        or queue[0].arrival > step \
+                        or self.page_pool.available < maxp:
+                    continue
+                r = queue.popleft()
+                bl = bucket_for(r.prompt_len, self.buckets)
+                pages = self.page_pool.alloc(maxp)
+                table[i] = pages
+                req_key = jax.random.fold_in(base_key, r.rid)
+                keys[i] = np.asarray(req_key, np.uint32)
+                padded = np.zeros((1, bl), np.int32)
+                padded[0, :r.prompt_len] = r.tokens
+                fn = self._get_prefill(bl)
+                self.dispatch_counter[f"prefill_{bl}"] += 1
+                tok, self.pools = fn(
+                    params, self.pools, jnp.asarray(padded),
+                    jnp.int32(r.prompt_len),
+                    jnp.asarray(pages[:bl // layout.page_size], jnp.int32),
+                    req_key)
+                t0 = int(tok[0])
+                s.rid, s.pos, s.generated = r.rid, r.prompt_len, 1
+                s.pages, s.admitted_step = pages, step
+                toks[r.rid] = [t0]
+                last_tok[i] = t0
+                if self.max_new == 1 or t0 == self.eos_id:
+                    retire(s, step)
+            # -- one lockstep decode step over all slots --------------
+            active = [s.rid is not None for s in slots]
+            if any(active):
+                busy_acc += sum(active)
+                fn = self._get_decode()
+                self.dispatch_counter["decode"] += 1
+                pos = np.array([s.pos for s in slots], np.int32)
+                nxt, self.pools = fn(params, self.pools,
+                                     jnp.asarray(table),
+                                     jnp.asarray(last_tok),
+                                     jnp.asarray(pos), jnp.asarray(keys))
+                nxt = np.asarray(nxt)
+                for i, s in enumerate(slots):
+                    if s.rid is None:
+                        continue
+                    t = int(nxt[i])
+                    toks[s.rid].append(t)
+                    s.pos += 1
+                    s.generated += 1
+                    last_tok[i] = t
+                    if t == self.eos_id or s.generated >= self.max_new:
+                        retire(s, step)
+            step += 1
+
+        waits = np.array([r.wait_steps for r in results.values()])
+        lens = np.array([len(r.tokens) for r in results.values()])
+        stats = {
+            "steps": step,
+            "requests": len(results),
+            "generated_tokens": int(lens.sum()),
+            "slot_utilization": float(busy_acc / max(step * self.slots, 1)),
+            "executables": self.num_executables,
+            "buckets_used": sorted(
+                int(k.split("_")[1]) for k in self.dispatch_counter
+                if k.startswith("prefill_")),
+            "wait_p50_steps": float(np.percentile(waits, 50)),
+            "wait_p99_steps": float(np.percentile(waits, 99)),
+            "dispatches": dict(self.dispatch_counter),
+        }
+        return {"results": results, "stats": stats}

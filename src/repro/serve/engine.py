@@ -30,7 +30,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -46,23 +46,40 @@ from .sampling import SamplingParams, request_keys, sample_token, step_keys
 
 
 def decode_logits_scan(cfg, params, caches, tokens, index0, *, enc_out=None,
-                       decode_mode="dus", kernel_config=None):
+                       decode_mode="dus", block_table=None,
+                       kernel_config=None):
     """Teacher-forced decode scan: feed ``tokens[:, t]`` at position
     ``index0 + t`` and return the per-step logits ``(B, T, V)`` plus the
     final caches — the scoring building block, and the oracle that
     pins scan-decode == per-token-loop == full-prefill logits parity
-    (tests/test_serve_engine.py)."""
+    (tests/test_serve_engine.py).  With ``decode_mode="paged"``,
+    ``caches`` are page pools, ``block_table`` is the (B, max_pages)
+    int32 slot map and ``index0`` may be a (B,) vector of per-slot
+    start positions (each slot advances independently)."""
     def body(carry, tok):
         caches, idx = carry
         logits, caches = M.decode_step(cfg, params, caches, tok[:, None],
                                        idx, enc_out=enc_out,
                                        decode_mode=decode_mode,
+                                       block_table=block_table,
                                        kernel_config=kernel_config)
         return (caches, idx + 1), logits[:, 0]
 
     (caches, _), ls = jax.lax.scan(
         body, (caches, jnp.asarray(index0, jnp.int32)), tokens.T)
     return ls.transpose(1, 0, 2), caches
+
+
+class GenerationResult(NamedTuple):
+    """Everything the generation executable produced.  ``caches`` are
+    the final KV caches (filled through the last generated position) and
+    ``lengths`` the per-request generated token counts INCLUDING the
+    terminating eos — the state a multi-turn / prefix-reuse caller needs
+    to continue without re-prefilling from scratch."""
+    tokens: Any    # (B, max_new) int32
+    done: Any      # (B,) bool
+    caches: Any    # KV cache pytree, filled for [0, index0 + lengths)
+    lengths: Any   # (B,) int32
 
 
 @dataclass(frozen=True)
@@ -91,16 +108,33 @@ class GenerationBundle:
         """Prefill ``batch`` then generate ``max_new`` tokens in one
         compiled call.  Returns ``(tokens (B, max_new) int32,
         done (B,) bool)``."""
+        r = self.generate_with_state(params, batch, key)
+        return r.tokens, r.done
+
+    def generate_with_state(self, params, batch,
+                            key=None) -> GenerationResult:
+        """Like :meth:`generate` but ALSO returns the final KV caches
+        and per-request generated lengths (historically both were
+        computed in-graph and discarded on the way out)."""
         logits, caches, enc = self.prefill_fn(params, batch)
         if key is None:
             key = jax.random.PRNGKey(0)
         self.dispatch_counter[0] += 1
         if enc is not None:
-            tokens, done, _ = self.generate_fn(params, logits, caches, key,
-                                               enc)
+            tokens, done, caches = self.generate_fn(params, logits, caches,
+                                                    key, enc)
         else:
-            tokens, done, _ = self.generate_fn(params, logits, caches, key)
-        return tokens, done
+            tokens, done, caches = self.generate_fn(params, logits, caches,
+                                                    key)
+        if self.eos_id is None:
+            lengths = jnp.full((tokens.shape[0],), self.max_new, jnp.int32)
+        else:
+            hit = tokens == self.eos_id
+            lengths = jnp.where(hit.any(axis=1),
+                                jnp.argmax(hit, axis=1) + 1,
+                                self.max_new).astype(jnp.int32)
+        return GenerationResult(tokens=tokens, done=done, caches=caches,
+                                lengths=lengths)
 
 
 @lru_cache(maxsize=None)
