@@ -29,6 +29,16 @@ utilization and the p50/p99 queueing delays in virtual decode-step
 units (the trace and scheduler are seed-pinned, so these are exact
 reproducibility indicators, not timings).  Wall-clock tokens/s stays
 informational like every timing in this suite.
+
+The speculative section (DESIGN.md Sec. 15) extends the dispatch model
+to draft-k-verify-once decoding: with per-draft acceptance rate alpha,
+a round emits ``(1 - alpha^(k+1)) / (1 - alpha)`` expected tokens for
+ONE sequential full-depth pass, so sequential passes per emitted token
+drop below 1 whenever ``alpha >= 0.5`` and ``k >= 2`` — the analytic
+claim this suite gates, alongside MEASURED deterministic rounds /
+acceptance counts and the still-1-executable-call contract of the
+speculative scan engine (greedy speculative tokens are asserted
+bit-identical to the plain scan).
 """
 from __future__ import annotations
 
@@ -54,10 +64,25 @@ B, P, N = 2, 8, 8       # batch, prompt length, generated tokens
 TRACE_REQUESTS, TRACE_RATE, TRACE_SEED = 32, 0.7, 0
 SLOTS, BUCKETS, MAX_NEW = 4, (8, 16, 32), 4
 
+# speculative draft depths exercised by the measured section
+SPEC_KS = (2, 4)
+SPEC_DRAFT_LAYERS = 1
+
 
 def dispatch_model(n: int) -> dict[str, dict[str, int]]:
     return {"loop": {"executable_calls": n - 1, "host_syncs": n},
             "scan": {"executable_calls": 1, "host_syncs": 0}}
+
+
+def speculative_model(alpha: float, k: int) -> dict[str, float]:
+    """Expected draft-k-verify-once economics at per-draft acceptance
+    rate ``alpha``: tokens emitted per round (the truncated geometric
+    sum ``1 + alpha + ... + alpha^k``) and its inverse, sequential
+    full-depth passes per emitted token (the plain scan pays exactly
+    1.0)."""
+    tokens_per_round = sum(alpha ** i for i in range(k + 1))
+    return {"tokens_per_round": tokens_per_round,
+            "passes_per_token": 1.0 / tokens_per_round}
 
 
 def _best_s(fn, iters: int = 5) -> float:
@@ -136,6 +161,10 @@ def run() -> dict:
     emit(f"serving/generate/N{N}/scan", s_scan * 1e6, f"tokens={B * N}")
     emit(f"serving/generate/N{N}/loop", s_loop * 1e6, f"tokens={B * N}")
 
+    # --- speculative decoding: model + measured -----------------------
+    spec = _run_speculative(cfg, mesh, params, batch,
+                            np.asarray(scan_tokens))
+
     # --- continuous-batching sustained throughput ---------------------
     cont = _run_continuous(cfg, params)
 
@@ -144,7 +173,58 @@ def run() -> dict:
             "greedy_parity": bool(parity),
             "tokens_per_s": {"scan": B * N / s_scan, "loop": B * N / s_loop},
             "shape": {"batch": B, "prompt": P, "gen": N},
+            "speculative": spec,
             "continuous": cont}
+
+
+def _run_speculative(cfg, mesh, params, batch, plain_tokens) -> dict:
+    """Gate the speculative dispatch model (analytic) and the measured
+    deterministic round/acceptance counts of the speculative scan
+    engine.  Everything here is exact integers or closed-form floats —
+    no timings."""
+    # analytic claim: above alpha = 0.5 a draft depth of k >= 2 takes
+    # the engine below one sequential full-depth pass per emitted token
+    analytic = {}
+    for alpha in (0.5, 0.8):
+        for k in SPEC_KS:
+            m = speculative_model(alpha, k)
+            assert m["passes_per_token"] < 1.0, \
+                f"speculative model must beat 1 pass/token at " \
+                f"alpha={alpha}, k={k}: {m}"
+            analytic[f"alpha{alpha}_k{k}"] = m
+            emit(f"serving/speculative/model/alpha{alpha}/k{k}", 0.0,
+                 f"tokens_per_round={m['tokens_per_round']:.6f};"
+                 f"passes_per_token={m['passes_per_token']:.6f}")
+
+    measured = {}
+    for k in SPEC_KS:
+        eng = make_engine(cfg, mesh, batch=B, prompt_len=P, max_new=N,
+                          param_dtype=jnp.float32, cache_dtype=jnp.float32,
+                          speculate_k=k, draft_layers=SPEC_DRAFT_LAYERS)
+        before = eng.dispatch_counter[0]
+        res = eng.generate_with_state(params, batch)
+        calls = eng.dispatch_counter[0] - before
+        assert calls == 1, \
+            "speculate-verify round must stay inside ONE executable"
+        parity = int(np.array_equal(np.asarray(res.tokens), plain_tokens))
+        assert parity == 1, \
+            f"greedy speculative k={k} diverged from the plain scan"
+        rounds = int(np.asarray(res.spec.rounds).sum())
+        drafted = int(np.asarray(res.spec.drafted).sum())
+        accepted = int(np.asarray(res.spec.accepted).sum())
+        tokens = int(np.asarray(res.lengths).sum())
+        acc_rate = accepted / max(drafted, 1)
+        passes = rounds / max(tokens - B, 1)  # first token comes from
+        #                                       prefill, not a round
+        emit(f"serving/speculative/measured/k{k}", 0.0,
+             f"executable_calls={calls};parity={parity};rounds={rounds};"
+             f"drafted={drafted};accepted={accepted};tokens={tokens}")
+        measured[f"k{k}"] = {
+            "rounds": rounds, "drafted": drafted, "accepted": accepted,
+            "tokens": tokens, "acceptance_rate": acc_rate,
+            "rounds_per_token": passes,
+            "draft_layers": SPEC_DRAFT_LAYERS}
+    return {"analytic": analytic, "measured": measured}
 
 
 def _run_continuous(cfg, params) -> dict:

@@ -337,6 +337,42 @@ def sdpa(q, k, v, *, causal: bool = True, window=None, softcap=None,
     return _sdpa_pallas(statics, q, k, v, q_start, k_valid)
 
 
+def sdpa_decode(q, k, v, *, q_start, k_valid_len, causal: bool = True,
+                window=None, softcap=None, scale=None,
+                config: KernelConfig | None = None):
+    """Dense-cache decode/verify attention with PER-REQUEST ragged query
+    positions — the k-token speculative-verify entry point.
+
+    q: (B, Tq, H, hd);  k, v: (B, S, KV, hd[, hd_v]) with H % KV == 0;
+    q_start / k_valid_len: (B,) int32 — unlike :func:`sdpa`, ``q_start``
+    is a per-request vector (after the first speculative round every
+    slot sits at a different position).  Decode/serving only: there is
+    deliberately no custom VJP (training never holds a ragged decode
+    window), which is exactly what lets the flash kernel's per-batch
+    ``q_start`` operand be used directly — :func:`sdpa` cannot, because
+    its backward recomputes through the shared-scalar reference.
+
+    ``ref`` is :func:`repro.kernels.ref.grouped_sdpa_decode_ref`, whose
+    row-scanned structure makes a (Tq = k+1)-token verify bit-identical
+    to k+1 single-token calls — the speculative lossless contract.
+    """
+    cfg = resolve_config(config)
+    B, Tq, H, hd = q.shape
+    S = k.shape[1]
+    q_start = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32), (B,))
+    k_valid = jnp.broadcast_to(jnp.asarray(k_valid_len, jnp.int32), (B,))
+    if cfg.use_pallas and pallas_shape_ok("flash_attention", (Tq, S, hd)):
+        out = flash_attention_pallas(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window,
+            softcap=softcap, scale=scale, q_start=q_start,
+            k_valid_len=k_valid, interpret=cfg.run_interpret)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)
+    return ref.grouped_sdpa_decode_ref(
+        q, k, v, q_start=q_start, k_valid_len=k_valid, causal=causal,
+        window=window, softcap=softcap, scale=scale)
+
+
 def paged_sdpa(q, k_pages, v_pages, block_table, *, q_start, k_valid_len,
                causal: bool = True, window=None, softcap=None, scale=None,
                config: KernelConfig | None = None):

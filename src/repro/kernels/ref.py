@@ -141,6 +141,65 @@ def grouped_sdpa_ref(q, k, v, *, causal=True, window=None, softcap=None,
     return out.reshape(B, Tq, H, hd_v).astype(q.dtype)
 
 
+def grouped_sdpa_decode_ref(q, k, v, *, q_start, k_valid_len, causal=True,
+                            window=None, softcap=None,
+                            scale=None) -> jnp.ndarray:
+    """Dense-cache decode/verify attention with PER-REQUEST ragged query
+    positions — the reference behind ``ops.sdpa_decode`` (the k-token
+    speculative-verify entry).
+
+    q: (B, Tq, H, hd);  k, v: (B, S, KV, hd[, hd_v]) with H % KV == 0;
+    ``q_start``: (B,) absolute position of each request's FIRST query
+    (query i of request b sits at ``q_start[b] + i``);  ``k_valid_len``:
+    (B,) valid cache prefix.
+
+    Query rows are computed by a ``lax.map`` of single-row blocks, each
+    reproducing the Tq=1 op sequence of :func:`grouped_sdpa_ref`
+    verbatim.  That structure is load-bearing: the speculative engine's
+    lossless guarantee is that verifying k+1 tokens in ONE call is
+    bit-identical to the plain one-token-per-step scan, and for
+    ``hd_v != hd`` heads (MLA's absorbed layout) XLA lowers a fused
+    (Tq>1, S) contraction with a different reduction order than the
+    Tq=1 step in the last ulp — scanning rows keeps the per-row
+    reduction order identical by construction.
+    """
+    B, Tq, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    G = H // KV
+    if scale is None:
+        scale = hd ** -0.5
+    q_start = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32), (B,))
+    k_valid = jnp.broadcast_to(jnp.asarray(k_valid_len, jnp.int32), (B,))
+    kpos = jnp.arange(S)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = q.reshape(B, Tq, KV, G, hd)
+
+    def row(i):
+        qi = jax.lax.dynamic_slice_in_dim(qg, i, 1, axis=1)  # (B,1,KV,G,hd)
+        qpos = q_start + i                                   # (B,)
+        logits = jnp.einsum("btkgd,bskd->btkgs", qi.astype(jnp.float32),
+                            kf) * scale
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        m = kpos[None, :] < k_valid[:, None]                 # (B, S)
+        if causal:
+            m = m & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            m = m & (kpos[None, :] > qpos[:, None] - window)
+        logits = jnp.where(m[:, None, None, None, :], logits, _NEG_INF)
+        mx = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp(logits - mx)
+        out = jnp.einsum("btkgs,bskd->btkgd", p, vf)
+        den = jnp.maximum(p.sum(-1), 1e-30)
+        return out / den[..., None]
+
+    out = jax.lax.map(row, jnp.arange(Tq))      # (Tq, B, 1, KV, G, hd_v)
+    out = jnp.moveaxis(out[:, :, 0], 0, 1)      # (B, Tq, KV, G, hd_v)
+    return out.reshape(B, Tq, H, hd_v).astype(q.dtype)
+
+
 def paged_sdpa_ref(q, k_pages, v_pages, block_table, *, q_start,
                    k_valid_len, causal=True, window=None, softcap=None,
                    scale=None) -> jnp.ndarray:

@@ -7,7 +7,9 @@ token positions, on-device sampling), not a per-token dispatch loop.
 
     python -m repro.launch.serve --arch gemma3-1b --reduced --devices 8 \
         --batch 4 --prompt-len 16 --gen 8 [--sample --temperature 0.8 \
-        --top-k 40] [--eos-id 1]
+        --top-k 40 --top-p 0.95] [--eos-id 1] \
+        [--speculate-k 4 --draft-layers 2 | --speculate-k 4 \
+         --draft-config gemma3-1b]
 
 ``--continuous`` switches to the paged continuous-batching engine
 (``repro.serve.ContinuousEngine``, DESIGN.md Sec. 14): requests stream
@@ -16,7 +18,8 @@ as they free up.
 
     python -m repro.launch.serve --arch gemma3-1b --reduced --continuous \
         --requests 32 --arrival-rate 0.5 --trace-seed 0 --slots 4 \
-        --page-size 8 --prompt-len 48 --gen 8
+        --page-size 8 --prompt-len 48 --gen 8 \
+        [--speculate-k 4 --draft-layers 2] [--prefill-batch 2]
 
 EVERY shape that becomes a compile key — prompt padding, engine bucket
 list, trace prompt-length range — is derived through
@@ -61,10 +64,27 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0,
                     help="truncate sampling to the k most likely tokens "
                          "(0 = full vocab)")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling mass (0 or 1 = disabled; "
+                         "composes with --top-k)")
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="stop token id (>= 0 enables the done-mask "
                          "early exit)")
     ap.add_argument("--seed", type=int, default=0)
+    # speculative decoding (DESIGN.md Sec. 15)
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="draft k tokens per round and verify them in one "
+                         "ragged pass (0 = plain decoding)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="[speculative] early-exit depth of the "
+                         "self-speculative draft (0 = num_blocks // 2)")
+    ap.add_argument("--draft-config", default="",
+                    help="[speculative, fixed-batch] arch name of a "
+                         "separate draft model (mutually exclusive with "
+                         "--draft-layers)")
+    ap.add_argument("--prefill-batch", type=int, default=1,
+                    help="[continuous] admit up to this many same-bucket "
+                         "requests per prefill dispatch")
     # continuous-batching frontend
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching paged engine instead of the "
@@ -107,7 +127,8 @@ def main() -> None:
     sampling = SamplingParams(
         mode="sample" if args.sample else "greedy",
         temperature=args.temperature,
-        top_k=args.top_k if args.top_k > 0 else None)
+        top_k=args.top_k if args.top_k > 0 else None,
+        top_p=args.top_p if 0.0 < args.top_p < 1.0 else None)
     eos_id = args.eos_id if args.eos_id >= 0 else None
 
     if args.continuous:
@@ -137,21 +158,32 @@ def main() -> None:
                                                       dtype, patches=16)
         npfx = 16
 
+    draft_cfg = draft_params = None
+    if args.draft_config:
+        draft_cfg = get_config(args.draft_config)
+        if args.reduced:
+            draft_cfg = draft_cfg.reduced()
+        draft_params = M.init(draft_cfg, jax.random.fold_in(k_init, 1),
+                              dtype)
     engine = make_engine(
         cfg, mesh, batch=B, prompt_len=padded_len, max_new=args.gen,
         sampling=sampling, eos_id=eos_id, prefix_len=npfx,
-        param_dtype=dtype, cache_dtype=dtype)
+        param_dtype=dtype, cache_dtype=dtype,
+        speculate_k=args.speculate_k,
+        draft_layers=args.draft_layers or None, draft_cfg=draft_cfg)
 
     # Warm-up call: compiles prefill + the whole generation scan.  The
     # historical launcher timed ms/token INCLUDING this first-call
     # compile, which made the steady-state number meaningless.
     t0 = time.time()
-    res = engine.generate_with_state(params, batch, key=k_sample)
+    res = engine.generate_with_state(params, batch, key=k_sample,
+                                     draft_params=draft_params)
     jax.block_until_ready(res.tokens)
     t_compile = time.time() - t0
 
     t0 = time.time()
-    res = engine.generate_with_state(params, batch, key=k_sample)
+    res = engine.generate_with_state(params, batch, key=k_sample,
+                                     draft_params=draft_params)
     jax.block_until_ready(res.tokens)
     dt = time.time() - t0
 
@@ -166,6 +198,15 @@ def main() -> None:
     if eos_id is not None:
         print(f"done mask: {list(map(bool, res.done))}  "
               f"lengths: {list(map(int, res.lengths))}")
+    if res.spec is not None:
+        import numpy as np
+        rounds = int(np.asarray(res.spec.rounds).sum())
+        drafted = int(np.asarray(res.spec.drafted).sum())
+        accepted = int(np.asarray(res.spec.accepted).sum())
+        print(f"speculative: k={args.speculate_k}, {rounds} rounds, "
+              f"acceptance {accepted}/{drafted} "
+              f"({accepted / max(drafted, 1):.2f}); "
+              f"{n_tok / max(rounds, 1):.2f} tokens per sequential pass")
 
 
 def _run_continuous(args, cfg, params, sampling, eos_id, dtype,
@@ -177,8 +218,15 @@ def _run_continuous(args, cfg, params, sampling, eos_id, dtype,
     from repro.models.model import PagedCacheLayout
     from repro.serve import ContinuousEngine, poisson_trace
 
+    if args.draft_config:
+        raise SystemExit("--draft-config is fixed-batch only; the "
+                         "continuous engine speculates self-speculatively "
+                         "(--draft-layers)")
     buckets, max_bucket = plan_shapes(args.prompt_len, args.page_size)
-    max_pages = -(-(max_bucket + args.gen) // args.page_size)
+    # verify-window headroom: a speculative round writes up to
+    # speculate_k rows past the last committed position
+    max_pages = -(-(max_bucket + args.gen + args.speculate_k)
+                  // args.page_size)
     layout = PagedCacheLayout(
         page_size=args.page_size,
         num_pages=args.slots * max_pages + 1,   # +1: reserved scratch page
@@ -190,7 +238,11 @@ def _run_continuous(args, cfg, params, sampling, eos_id, dtype,
     engine = ContinuousEngine(
         cfg, slots=args.slots, layout=layout, max_new=args.gen,
         buckets=buckets, sampling=sampling, eos_id=eos_id,
-        param_dtype=dtype, cache_dtype=dtype)
+        param_dtype=dtype, cache_dtype=dtype,
+        speculate_k=args.speculate_k,
+        draft_layers=args.draft_layers or None
+        if args.speculate_k else None,
+        prefill_batch=args.prefill_batch)
 
     t0 = time.time()
     out = engine.run(params, trace, base_key=k_sample)
@@ -200,12 +252,18 @@ def _run_continuous(args, cfg, params, sampling, eos_id, dtype,
           f"{s['generated_tokens']} tokens in {s['steps']} decode steps")
     print(f"  executables: {s['executables']} "
           f"(buckets used {s['buckets_used']} + 1 decode; "
-          f"bound = {len(buckets) + 1})")
+          f"bound = {len(buckets)} buckets x {args.prefill_batch} "
+          f"group sizes + 1 = {len(buckets) * args.prefill_batch + 1})")
     print(f"  slot utilization: {s['slot_utilization']:.2f}  "
           f"queue wait p50/p99: {s['wait_p50_steps']:.1f}/"
           f"{s['wait_p99_steps']:.1f} steps")
     print(f"  wall: {dt:.2f}s incl. compiles "
           f"({s['generated_tokens'] / dt:.1f} tok/s)")
+    if "speculative" in s:
+        sp = s["speculative"]
+        print(f"  speculative: k={args.speculate_k}, {sp['rounds']} rounds, "
+              f"acceptance {sp['acceptance_rate']:.2f}, "
+              f"{sp['tokens_per_round']:.2f} tokens/round")
     for rid in sorted(out["results"])[:4]:
         r = out["results"][rid]
         print(f"  req {rid}: {list(map(int, r.tokens))}")

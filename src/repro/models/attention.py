@@ -201,25 +201,42 @@ def attn_apply(p, x, *, n_heads, n_kv, head_dim, rope_theta=10000.0,
         if kv_override is not None:
             raise NotImplementedError(
                 "paged decode does not support cross-attention K/V")
-        if T != 1:
-            raise ValueError("paged decode_mode is single-token (T == 1)")
         if block_table is None:
             raise ValueError("decode_mode='paged' requires a block_table")
-        # Scatter the fresh K/V into each slot's current tail page.  Free
-        # slots all map to the reserved scratch page (page 0, see
+        # Scatter the fresh K/V into each slot's current tail page(s).
+        # Free slots all map to the reserved scratch page (page 0, see
         # serve.paged.PagePool) so their garbage writes never land in a
-        # live request's pages.
+        # live request's pages.  T > 1 is the speculative verify window:
+        # positions idx..idx+T-1, possibly straddling a page boundary.
         ps = cache["k"].shape[1]
         idx = jnp.asarray(cache_index, jnp.int32)             # (B,) write pos
-        page = block_table[jnp.arange(B), idx // ps]          # (B,) physical
-        slot = idx % ps
-        k = cache["k"].at[page, slot].set(xk[:, 0].astype(cache["k"].dtype))
-        v = cache["v"].at[page, slot].set(xv[:, 0].astype(cache["v"].dtype))
+        pos = idx[:, None] + jnp.arange(T)                    # (B, T)
+        page = jnp.take_along_axis(block_table, pos // ps, axis=1)  # (B, T)
+        slot = pos % ps
+        k = cache["k"].at[page, slot].set(xk.astype(cache["k"].dtype))
+        v = cache["v"].at[page, slot].set(xv.astype(cache["v"].dtype))
         cache = {"k": k, "v": v}
         out = ops.paged_sdpa(q, k, v, block_table, q_start=idx,
-                             k_valid_len=idx + 1, causal=causal,
+                             k_valid_len=idx + T, causal=causal,
                              window=window, softcap=softcap, scale=scale,
                              config=kernel_config)
+        y = dense(p["wo"], out.reshape(B, T, n_heads * head_dim))
+        return y, cache
+    if cache is not None and kv_override is None \
+            and cache_index is not None and jnp.ndim(cache_index) == 1:
+        # Dense cache with PER-SLOT ragged write positions — the
+        # speculative verify window against the fixed-batch engine's
+        # cache.  Scatter-write (dus needs a shared scalar start), then
+        # attend through the VJP-free ragged-q_start decode entry.
+        idx = jnp.asarray(cache_index, jnp.int32)             # (B,)
+        pos = idx[:, None] + jnp.arange(T)                    # (B, T)
+        bidx = jnp.arange(B)[:, None]
+        k = cache["k"].at[bidx, pos].set(xk.astype(cache["k"].dtype))
+        v = cache["v"].at[bidx, pos].set(xv.astype(cache["v"].dtype))
+        cache = {"k": k, "v": v}
+        out = ops.sdpa_decode(q, k, v, q_start=idx, k_valid_len=idx + T,
+                              causal=causal, window=window, softcap=softcap,
+                              scale=scale, config=kernel_config)
         y = dense(p["wo"], out.reshape(B, T, n_heads * head_dim))
         return y, cache
     if cache is not None:

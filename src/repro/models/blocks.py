@@ -162,8 +162,15 @@ def stack_init(key, cfg: ArchConfig, dtype) -> dict:
 
 def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
                 cache_index=None, enc_out=None, causal=True, remat=False,
-                decode_mode="dus", block_table=None, kernel_config=None):
-    """caches: {"prologue": [...], "blocks": stacked-per-block pytree}."""
+                decode_mode="dus", block_table=None, kernel_config=None,
+                num_blocks_limit: int | None = None):
+    """caches: {"prologue": [...], "blocks": stacked-per-block pytree}.
+
+    ``num_blocks_limit`` runs only the FIRST n pattern blocks (after the
+    full prologue) — the self-speculative draft's early exit.  The
+    untouched tail blocks' caches pass through unchanged, so a draft
+    step writes exactly the first-n-blocks K/V rows (which the verify
+    pass then overwrites with full-depth bits or rolls back)."""
     aux_total = jnp.float32(0.0)
     new_pro_caches = []
     for i, spec in enumerate(cfg.prologue):
@@ -197,11 +204,25 @@ def stack_apply(params: dict, x, cfg: ArchConfig, *, caches=None,
         return (xc, auxc), new_bc if caches is not None else None
 
     body = jax.checkpoint(block_body) if remat else block_body
-    xs = params["blocks"] if caches is None \
-        else (params["blocks"], caches["blocks"])
+    bparams, bcaches = params["blocks"], None if caches is None \
+        else caches["blocks"]
+    if num_blocks_limit is not None:
+        if not 0 <= num_blocks_limit <= cfg.num_blocks:
+            raise ValueError(
+                f"num_blocks_limit must be in [0, {cfg.num_blocks}], got "
+                f"{num_blocks_limit}")
+        n = num_blocks_limit
+        bparams = jax.tree.map(lambda a: a[:n], bparams)
+        if bcaches is not None:
+            bcaches = jax.tree.map(lambda a: a[:n], bcaches)
+    xs = bparams if caches is None else (bparams, bcaches)
     (x, aux_total), block_caches = jax.lax.scan(body, (x, aux_total), xs)
     new_caches = None
     if caches is not None:
+        if num_blocks_limit is not None:
+            block_caches = jax.tree.map(
+                lambda full, part: full.at[:num_blocks_limit].set(part),
+                caches["blocks"], block_caches)
         new_caches = {"prologue": new_pro_caches, "blocks": block_caches}
     return x, new_caches, aux_total
 

@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 from .attention import sdpa
 from .layers import dense, dense_init, rmsnorm, rmsnorm_init, rope
 
@@ -51,13 +53,29 @@ def mla_apply(p, x, *, n_heads, q_lora_rank=1536, kv_lora_rank=512,
     ckv = rmsnorm(p["kv_a_norm"], kv_a[..., :kv_lora_rank])   # (B, T, r)
     k_rope = kv_a[..., kv_lora_rank:].reshape(B, T, 1, qk_rope_dim)
 
-    pos0 = 0 if cache_index is None else cache_index
-    positions = pos0 + jnp.arange(T)
+    ragged = cache_index is not None and jnp.ndim(cache_index) == 1
+    if ragged:
+        # per-slot write positions (speculative verify): rope gets (B, T)
+        positions = jnp.asarray(cache_index, jnp.int32)[:, None] \
+            + jnp.arange(T)
+    else:
+        pos0 = 0 if cache_index is None else cache_index
+        positions = pos0 + jnp.arange(T)
     q_rope = rope(q_rope, positions, rope_theta)
     k_rope = rope(k_rope, positions, rope_theta)
 
     k_valid = None
-    if cache is not None:
+    if cache is not None and ragged:
+        idx = jnp.asarray(cache_index, jnp.int32)             # (B,)
+        bidx = jnp.arange(B)[:, None]
+        ckv = cache["ckv"].at[bidx, positions].set(
+            ckv.astype(cache["ckv"].dtype))
+        k_rope = cache["krope"].at[bidx, positions].set(
+            k_rope.reshape(B, T, qk_rope_dim).astype(cache["krope"].dtype)
+        ).reshape(B, -1, 1, qk_rope_dim)
+        cache = {"ckv": ckv, "krope": k_rope.reshape(B, -1, qk_rope_dim)}
+        k_valid = idx + T
+    elif cache is not None:
         ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv,
                                                   cache_index, axis=1)
         k_rope = jax.lax.dynamic_update_slice_in_dim(
@@ -78,8 +96,15 @@ def mla_apply(p, x, *, n_heads, q_lora_rank=1536, kv_lora_rank=512,
                                   (B, S, n_heads, qk_rope_dim))], axis=-1)
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    out = sdpa(qf, k, v, causal=True, softcap=softcap,
-               scale=qk_dim ** -0.5,
-               q_positions=positions, k_valid_len=k_valid,
-               kernel_config=kernel_config)
+    if ragged:
+        out = ops.sdpa_decode(qf, k, v,
+                              q_start=jnp.asarray(cache_index, jnp.int32),
+                              k_valid_len=k_valid, causal=True,
+                              softcap=softcap, scale=qk_dim ** -0.5,
+                              config=kernel_config)
+    else:
+        out = sdpa(qf, k, v, causal=True, softcap=softcap,
+                   scale=qk_dim ** -0.5,
+                   q_positions=positions, k_valid_len=k_valid,
+                   kernel_config=kernel_config)
     return dense(p["wo"], out.reshape(B, T, n_heads * v_head_dim)), cache

@@ -98,8 +98,12 @@ def encode(cfg: ArchConfig, params, frames, *,
 
 def backbone(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
              enc_out=None, caches=None, cache_index=None, remat=False,
-             decode_mode="dus", block_table=None, kernel_config=None):
-    """Returns (hidden, new_caches, aux)."""
+             decode_mode="dus", block_table=None, kernel_config=None,
+             num_blocks_limit=None):
+    """Returns (hidden, new_caches, aux).  ``num_blocks_limit`` is the
+    self-speculative early exit: run the prologue + first n pattern
+    blocks only, sharing the final norm / output head with the
+    full-depth model."""
     x = embed(params["embed"], tokens)
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
@@ -109,7 +113,8 @@ def backbone(cfg: ArchConfig, params, tokens, *, prefix_embeds=None,
                                  cache_index=cache_index, enc_out=enc_out,
                                  remat=remat, decode_mode=decode_mode,
                                  block_table=block_table,
-                                 kernel_config=kernel_config)
+                                 kernel_config=kernel_config,
+                                 num_blocks_limit=num_blocks_limit)
     return rmsnorm(params["final_norm"], x), caches, aux
 
 
@@ -227,19 +232,23 @@ def prefill(cfg: ArchConfig, params, batch, max_seq: int,
 
 def decode_step(cfg: ArchConfig, params, caches, tokens, index,
                 enc_out=None, *, decode_mode="dus", block_table=None,
-                kernel_config=None):
-    """One-token step.  tokens: (B, 1); index: scalar position of that
-    token (cache filled for [0, index)).  ``decode_mode`` is the explicit
-    cache policy threaded to the attention layers: ``"dus"`` writes the
-    fresh K/V at ``index``; ``"append_free"`` attends over the frozen
-    cache + fresh token and returns the cache untouched; ``"paged"``
-    takes a (B,) vector ``index`` of per-slot positions plus
-    ``block_table`` (B, max_pages) and scatter-writes into page pools."""
+                kernel_config=None, draft_layers=None):
+    """Decode step.  tokens: (B, T) with T == 1 for plain decoding or
+    T == k+1 for a speculative verify window; index: scalar position of
+    the first token (cache filled for [0, index)) or a (B,) vector of
+    per-slot ragged positions.  ``decode_mode`` is the explicit cache
+    policy threaded to the attention layers: ``"dus"`` writes the fresh
+    K/V at ``index``; ``"append_free"`` attends over the frozen cache +
+    fresh token and returns the cache untouched; ``"paged"`` takes a
+    (B,) vector ``index`` plus ``block_table`` (B, max_pages) and
+    scatter-writes into page pools.  ``draft_layers`` runs the
+    self-speculative early exit (first n pattern blocks only)."""
     h, caches, _ = backbone(cfg, params, tokens, enc_out=enc_out,
                             caches=caches, cache_index=index,
                             decode_mode=decode_mode,
                             block_table=block_table,
-                            kernel_config=kernel_config)
+                            kernel_config=kernel_config,
+                            num_blocks_limit=draft_layers)
     logits = h @ _out_proj(cfg, params)
     if cfg.final_softcap is not None:
         logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)

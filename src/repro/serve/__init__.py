@@ -9,15 +9,17 @@ Sec. 14)."""
 from repro.models.model import PagedCacheLayout
 
 from .continuous import ContinuousEngine, RequestResult
-from .engine import (GenerationBundle, GenerationResult, decode_logits_scan,
-                     make_engine)
+from .engine import (GenerationBundle, GenerationResult, SpecStats,
+                     decode_logits_scan, make_engine)
 from .paged import PagePool, Request, bucket_for, poisson_trace, \
     prompt_buckets
-from .sampling import SamplingParams, sample_token
+from .sampling import (SamplingParams, fold_pos_keys, sample_token,
+                       speculative_accept)
 
 __all__ = [
-    "GenerationBundle", "GenerationResult", "make_engine",
+    "GenerationBundle", "GenerationResult", "SpecStats", "make_engine",
     "decode_logits_scan", "SamplingParams", "sample_token",
+    "fold_pos_keys", "speculative_accept",
     "ContinuousEngine", "RequestResult", "PagedCacheLayout", "PagePool",
     "Request", "bucket_for", "poisson_trace", "prompt_buckets",
 ]

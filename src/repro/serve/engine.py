@@ -42,7 +42,9 @@ from repro.dist.steps import _dp_entry, _shardings, make_prefill
 from repro.kernels import ops
 from repro.models import model as M
 
-from .sampling import SamplingParams, request_keys, sample_token, step_keys
+from .sampling import (DRAFT_STREAM, SamplingParams, fold_pos_keys,
+                       request_keys, sample_token, speculative_accept,
+                       step_keys)
 
 
 def decode_logits_scan(cfg, params, caches, tokens, index0, *, enc_out=None,
@@ -70,16 +72,29 @@ def decode_logits_scan(cfg, params, caches, tokens, index0, *, enc_out=None,
     return ls.transpose(1, 0, 2), caches
 
 
+class SpecStats(NamedTuple):
+    """Per-request speculative counters (all (B,) int32).  A round is
+    one draft-k + verify-once pass; ``accepted / drafted`` is the
+    measured acceptance rate and ``rounds / lengths`` the sequential
+    model passes per emitted token the benchmark models."""
+    rounds: Any
+    drafted: Any
+    accepted: Any
+
+
 class GenerationResult(NamedTuple):
     """Everything the generation executable produced.  ``caches`` are
     the final KV caches (filled through the last generated position) and
     ``lengths`` the per-request generated token counts INCLUDING the
     terminating eos — the state a multi-turn / prefix-reuse caller needs
-    to continue without re-prefilling from scratch."""
+    to continue without re-prefilling from scratch.  ``spec`` carries
+    the :class:`SpecStats` counters for speculative engines (None on
+    plain engines)."""
     tokens: Any    # (B, max_new) int32
     done: Any      # (B,) bool
     caches: Any    # KV cache pytree, filled for [0, index0 + lengths)
     lengths: Any   # (B,) int32
+    spec: Any = None
 
 
 @dataclass(frozen=True)
@@ -102,25 +117,45 @@ class GenerationBundle:
     eos_id: int | None
     decode_mode: str
     kernel_config: ops.KernelConfig
+    speculate_k: int = 0
+    draft_layers: int | None = None
+    draft_cfg: Any = None
+    draft_prefill_fn: Any = None
     dispatch_counter: list = field(default_factory=lambda: [0])
 
-    def generate(self, params, batch, key=None):
+    def generate(self, params, batch, key=None, *, draft_params=None):
         """Prefill ``batch`` then generate ``max_new`` tokens in one
         compiled call.  Returns ``(tokens (B, max_new) int32,
         done (B,) bool)``."""
-        r = self.generate_with_state(params, batch, key)
+        r = self.generate_with_state(params, batch, key,
+                                     draft_params=draft_params)
         return r.tokens, r.done
 
-    def generate_with_state(self, params, batch,
-                            key=None) -> GenerationResult:
+    def generate_with_state(self, params, batch, key=None, *,
+                            draft_params=None) -> GenerationResult:
         """Like :meth:`generate` but ALSO returns the final KV caches
         and per-request generated lengths (historically both were
-        computed in-graph and discarded on the way out)."""
+        computed in-graph and discarded on the way out).
+        ``draft_params`` are required iff the engine was built with a
+        ``draft_cfg`` (the separate-draft-model speculative mode; the
+        final DRAFT caches are discarded — prefix-reuse callers
+        re-prefill the cheap draft)."""
         logits, caches, enc = self.prefill_fn(params, batch)
         if key is None:
             key = jax.random.PRNGKey(0)
         self.dispatch_counter[0] += 1
-        if enc is not None:
+        spec = None
+        if self.speculate_k and self.draft_prefill_fn is not None:
+            if draft_params is None:
+                raise ValueError("this engine speculates through a "
+                                 "draft_cfg; pass draft_params")
+            _, dcaches, _ = self.draft_prefill_fn(draft_params, batch)
+            tokens, done, caches, spec = self.generate_fn(
+                params, draft_params, logits, caches, dcaches, key)
+        elif self.speculate_k:
+            tokens, done, caches, spec = self.generate_fn(params, logits,
+                                                          caches, key)
+        elif enc is not None:
             tokens, done, caches = self.generate_fn(params, logits, caches,
                                                     key, enc)
         else:
@@ -134,7 +169,25 @@ class GenerationBundle:
                                 jnp.argmax(hit, axis=1) + 1,
                                 self.max_new).astype(jnp.int32)
         return GenerationResult(tokens=tokens, done=done, caches=caches,
-                                lengths=lengths)
+                                lengths=lengths, spec=spec)
+
+
+def _check_spec_family(cfg, role: str) -> None:
+    """Speculation needs rollback-able per-position cache rows: every
+    layer must be attn-family (dense K/V or MLA latent — both are
+    per-position and window-restorable), with no encoder and no
+    cross-attention.  Mamba/SSM recurrent state and encoder-decoder
+    models have no per-position rows to roll back."""
+    if cfg.encoder is not None:
+        raise NotImplementedError(
+            f"speculative decoding does not cover encoder-decoder "
+            f"{role} models")
+    for spec in tuple(cfg.prologue) + tuple(cfg.pattern):
+        if spec.kind != "attn" or spec.cross_attn:
+            raise NotImplementedError(
+                f"speculative decoding needs attn-family layers with "
+                f"per-position cache rows; {role} config has "
+                f"kind={spec.kind!r} cross_attn={spec.cross_attn}")
 
 
 @lru_cache(maxsize=None)
@@ -142,17 +195,52 @@ def make_engine(cfg, mesh, *, batch: int, prompt_len: int, max_new: int,
                 sampling: SamplingParams = SamplingParams(),
                 eos_id: int | None = None, prefix_len: int = 0,
                 param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
-                kernel_config: ops.KernelConfig | None = None
-                ) -> GenerationBundle:
+                kernel_config: ops.KernelConfig | None = None,
+                speculate_k: int = 0, draft_layers: int | None = None,
+                draft_cfg=None) -> GenerationBundle:
     """Build (or fetch the memoized) generation engine for one serving
     configuration.  ``prefix_len`` counts non-token prefix positions
     (vision prefix embeddings).  The KV cache covers
-    ``prompt_len + prefix_len + max_new`` positions."""
+    ``prompt_len + prefix_len + max_new`` positions (plus
+    ``speculate_k`` headroom for the last verify window).
+
+    ``speculate_k > 0`` turns on draft-k-verify-once speculative
+    decoding (DESIGN.md Sec. 15): each round drafts k tokens —
+    self-speculatively through the first ``draft_layers`` pattern
+    blocks of the same stack (default ``num_blocks // 2``), or with a
+    separate ``draft_cfg`` model holding its own cache — then scores
+    all k in ONE ragged-Tq verify call and accepts/rolls back in-graph,
+    still one executable for the whole generation phase.  Greedy
+    speculative output is bit-identical to the plain greedy scan."""
     kcfg = ops.resolve_config(kernel_config)
     mode = "dus"   # scan decode appends every step; append-free is the
     #                single-step factory's concern (see DESIGN.md Sec. 10)
+    if speculate_k < 0:
+        raise ValueError(f"speculate_k must be >= 0, got {speculate_k}")
+    if speculate_k:
+        _check_spec_family(cfg, "target")
+        if draft_cfg is not None:
+            if draft_layers is not None:
+                raise ValueError("pass draft_layers (self-speculative) OR "
+                                 "draft_cfg (separate draft), not both")
+            _check_spec_family(draft_cfg, "draft")
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft_cfg.vocab_size} != target vocab "
+                    f"{cfg.vocab_size}")
+            if prefix_len:
+                raise NotImplementedError(
+                    "draft_cfg speculation does not cover prefix embeddings"
+                    " (the draft frontend differs); use self-speculative")
+        else:
+            if draft_layers is None:
+                draft_layers = max(1, cfg.num_blocks // 2)
+            if not 0 <= draft_layers <= cfg.num_blocks:
+                raise ValueError(
+                    f"draft_layers must be in [0, {cfg.num_blocks}], got "
+                    f"{draft_layers}")
     index0 = prompt_len + prefix_len
-    seq = index0 + max_new
+    seq = index0 + max_new + speculate_k
     pre = make_prefill(cfg, mesh, batch=batch, seq=seq,
                        param_dtype=param_dtype, cache_dtype=cache_dtype,
                        kernel_config=kcfg)
@@ -207,6 +295,187 @@ def make_engine(cfg, mesh, *, batch: int, prompt_len: int, max_new: int,
             toks = jnp.concatenate([toks, ys.T], axis=1)
         return toks, done, caches
 
+    # ------------------------------------------------------------------
+    # speculative generation: draft k -> verify once -> accept/rollback,
+    # all lax ops in the same single-executable scan (DESIGN.md Sec. 15)
+    # ------------------------------------------------------------------
+    k = speculate_k
+    kk = k + 1
+    bidx = jnp.arange(batch)[:, None]
+
+    def _gather_window(caches, win):
+        """Snapshot the (B, k+1) cache rows a round may write.
+        Prologue leaves are (B, S, ...), stacked-block leaves
+        (L, B, S, ...) — the seq axis is 1 resp. 2 by construction."""
+        return {"prologue": jax.tree.map(lambda a: a[bidx, win],
+                                         caches["prologue"]),
+                "blocks": jax.tree.map(lambda a: a[:, bidx, win],
+                                       caches["blocks"])}
+
+    def _restore_window(caches, saved, win, keep):
+        """Roll back rejected window rows: keep[b, j] True keeps the
+        round's write at position win[b, j], False restores the
+        snapshot — rejected drafts leave the cache bit-identical to
+        never having drafted."""
+        def mixp(a, s):
+            cur = a[bidx, win]
+            m = keep.reshape(keep.shape + (1,) * (cur.ndim - 2))
+            return a.at[bidx, win].set(jnp.where(m, cur, s))
+
+        def mixb(a, s):
+            cur = a[:, bidx, win]
+            m = keep.reshape((1,) + keep.shape + (1,) * (cur.ndim - 3))
+            return a.at[:, bidx, win].set(jnp.where(m, cur, s))
+
+        return {"prologue": jax.tree.map(mixp, caches["prologue"],
+                                         saved["prologue"]),
+                "blocks": jax.tree.map(mixb, caches["blocks"],
+                                       saved["blocks"])}
+
+    def _spec_generate(params, logits0, caches, key, dcaches=(),
+                       draft_params=None):
+        keys = request_keys(key, batch)
+        tok = sample_token(logits0[:, -1].astype(jnp.float32), sampling,
+                           step_keys(keys, index0) if sampling.needs_rng
+                           else None)
+        done = (tok == eos_id) if eos_id is not None \
+            else jnp.zeros((batch,), bool)
+        buf = jnp.full((batch, max_new),
+                       eos_id if eos_id is not None else 0, jnp.int32)
+        buf = buf.at[:, 0].set(tok)
+        n = jnp.ones((batch,), jnp.int32)
+        zeros = jnp.zeros((batch,), jnp.int32)
+
+        def live(args):
+            caches, dcaches, tok, done, n, buf, rounds, accepted = args
+            pos = index0 + n - 1                         # (B,) next write
+            win = pos[:, None] + jnp.arange(kk)          # (B, k+1)
+            saved = _gather_window(caches, win)
+            if draft_cfg is not None:
+                dsaved = _gather_window(dcaches, win)
+
+            # --- draft k tokens (T=1 steps, ragged vector positions) --
+            def dbody(carry, i):
+                c, cur = carry
+                if draft_cfg is None:
+                    lg, c = M.decode_step(cfg, params, c, cur[:, None],
+                                          pos + i, decode_mode=mode,
+                                          draft_layers=draft_layers,
+                                          kernel_config=kcfg)
+                else:
+                    lg, c = M.decode_step(draft_cfg, draft_params, c,
+                                          cur[:, None], pos + i,
+                                          decode_mode=mode,
+                                          kernel_config=kcfg)
+                lg = lg[:, -1].astype(jnp.float32)
+                dk = fold_pos_keys(keys, pos + 1 + i, DRAFT_STREAM) \
+                    if sampling.needs_rng else None
+                nxt = sample_token(lg, sampling, dk)
+                return (c, nxt), (lg, nxt)
+
+            dctx = caches if draft_cfg is None else dcaches
+            (dctx, last_d), (dlg, dtk) = jax.lax.scan(
+                dbody, (dctx, tok), jnp.arange(k))
+            if draft_cfg is None:
+                # self-speculative: the draft wrote first-draft_layers
+                # K/V inside the window; the verify pass overwrites the
+                # whole window at every layer before attending, so its
+                # logits never see draft bits.
+                caches = dctx
+            else:
+                # write-only extra step: D_k's draft K/V, so next
+                # round's draft (at pos + accept + 1) never reads a
+                # stale row even when everything was accepted.
+                _, dcaches = M.decode_step(draft_cfg, draft_params, dctx,
+                                           last_d[:, None], pos + k,
+                                           decode_mode=mode,
+                                           kernel_config=kcfg)
+
+            # --- verify all k+1 window rows in ONE ragged-Tq call -----
+            vt = jnp.concatenate([tok[:, None], jnp.moveaxis(dtk, 0, 1)],
+                                 axis=1)                 # (B, k+1)
+            vlg, caches = M.decode_step(cfg, params, caches, vt, pos,
+                                        decode_mode=mode,
+                                        kernel_config=kcfg)
+
+            # --- accept / emit / rollback -----------------------------
+            acc, emit = speculative_accept(
+                vlg, jnp.moveaxis(dlg, 0, 1), jnp.moveaxis(dtk, 0, 1),
+                sampling, keys if sampling.needs_rng else None, pos + 1)
+            m = acc + 1                                  # emitted count
+            if eos_id is not None:
+                hit = emit == eos_id
+                first = jnp.where(hit.any(1),
+                                  jnp.argmax(hit.astype(jnp.int32), 1), kk)
+                m = jnp.minimum(m, first + 1)
+            live_row = ~done & (n < max_new)
+            m = jnp.where(live_row, jnp.minimum(m, max_new - n), 0)
+            keep = jnp.arange(kk)[None, :] < m[:, None]  # (B, k+1)
+
+            widx = jnp.where(keep, n[:, None] + jnp.arange(kk), max_new)
+            buf = buf.at[bidx, widx].set(emit, mode="drop")
+            caches = _restore_window(caches, saved, win, keep)
+            if draft_cfg is not None:
+                dcaches = _restore_window(dcaches, dsaved, win, keep)
+            last = jnp.take_along_axis(
+                emit, jnp.maximum(m - 1, 0)[:, None], axis=1)[:, 0]
+            tok = jnp.where(live_row, last, tok)
+            if eos_id is not None:
+                done = done | (hit & keep).any(1)
+            rounds = rounds + live_row.astype(jnp.int32)
+            accepted = accepted + jnp.where(live_row, acc, 0)
+            return (caches, dcaches, tok, done, n + m, buf, rounds,
+                    accepted)
+
+        def body(carry, _):
+            n_cur, done_cur = carry[4], carry[3]
+            stop = (done_cur | (n_cur >= max_new)).all()
+            return jax.lax.cond(stop, lambda a: a, live, carry), None
+
+        carry = (caches, dcaches, tok, done, n, buf, zeros, zeros)
+        if max_new > 1:
+            carry, _ = jax.lax.scan(body, carry, None, length=max_new - 1)
+        caches, _, _, done, _, buf, rounds, accepted = carry
+        return buf, done, caches, SpecStats(rounds=rounds,
+                                            drafted=rounds * k,
+                                            accepted=accepted)
+
+    if speculate_k and draft_cfg is not None:
+        dpre = make_prefill(draft_cfg, mesh, batch=batch, seq=seq,
+                            param_dtype=param_dtype,
+                            cache_dtype=cache_dtype, kernel_config=kcfg)
+        dpsh = _shardings(mesh, param_partition_specs(
+            M.param_specs(draft_cfg, param_dtype), dpre.rules))
+        dcache_sds = jax.eval_shape(
+            lambda: M.init_cache(draft_cfg, batch, seq, cache_dtype))
+        dcsh = _shardings(mesh, cache_partition_specs(dcache_sds,
+                                                      dpre.rules))
+        ssh = SpecStats(rounds=dsh, drafted=dsh, accepted=dsh)
+        gen = jax.jit(
+            lambda p, dp, l, c, dc, k_: _spec_generate(
+                p, l, c, k_, dcaches=dc, draft_params=dp),
+            in_shardings=(psh, dpsh, dsh, csh, dcsh, repl),
+            out_shardings=(dsh, dsh, csh, ssh))
+        return GenerationBundle(prefill_fn=pre.fn, generate_fn=gen,
+                                rules=rules, seq=seq, index0=index0,
+                                max_new=max_new, sampling=sampling,
+                                eos_id=eos_id, decode_mode=mode,
+                                kernel_config=kcfg,
+                                speculate_k=speculate_k,
+                                draft_cfg=draft_cfg,
+                                draft_prefill_fn=dpre.fn)
+    if speculate_k:
+        ssh = SpecStats(rounds=dsh, drafted=dsh, accepted=dsh)
+        gen = jax.jit(lambda p, l, c, k_: _spec_generate(p, l, c, k_),
+                      in_shardings=(psh, dsh, csh, repl),
+                      out_shardings=(dsh, dsh, csh, ssh))
+        return GenerationBundle(prefill_fn=pre.fn, generate_fn=gen,
+                                rules=rules, seq=seq, index0=index0,
+                                max_new=max_new, sampling=sampling,
+                                eos_id=eos_id, decode_mode=mode,
+                                kernel_config=kcfg,
+                                speculate_k=speculate_k,
+                                draft_layers=draft_layers)
     if cfg.encoder is not None:
         gen = jax.jit(lambda p, l, c, k, e: _generate(p, l, c, k, e),
                       in_shardings=(psh, dsh, csh, repl, dsh),

@@ -16,6 +16,13 @@ the request's key.  A request's sampled sequence therefore depends only
 on (its key, its logits), not on the batch it shares or on how many
 steps other requests ran — the property that makes batched continuous
 serving reproducible per request.
+
+The speculative engine needs several independent draws per position
+(the draft proposal, the accept uniform, the correction draw), so it
+uses :func:`fold_pos_keys` — fold the position, then a stream tag — and
+:func:`speculative_accept`, the vectorized draft-k-verify-once
+accept/reject rule (greedy leading-match or standard residual
+rejection) that runs as ``lax`` ops inside the generation scan.
 """
 from __future__ import annotations
 
@@ -27,17 +34,26 @@ import jax.numpy as jnp
 _MODES = ("greedy", "sample")
 _NEG_INF = -1e30
 
+# fold_pos_keys stream tags: one per independent per-position draw
+DRAFT_STREAM, ACCEPT_STREAM, CORRECTION_STREAM = 0, 1, 2
+
 
 @dataclass(frozen=True)
 class SamplingParams:
     """Hashable sampling policy.
 
-    ``mode``: ``greedy`` (argmax; temperature/top_k ignored) or
+    ``mode``: ``greedy`` (argmax; temperature/top_k/top_p ignored) or
     ``sample`` (softmax sampling at ``temperature``, optionally
-    truncated to the ``top_k`` highest-probability tokens)."""
+    truncated to the ``top_k`` highest-probability tokens and/or the
+    ``top_p`` nucleus — the smallest set of tokens whose cumulative
+    probability reaches ``top_p``).  ``top_p=1.0`` is exactly
+    temperature sampling (no mask is ever applied), and top_k/top_p
+    compose: top_k truncates first, the nucleus is taken over the
+    renormalized survivors."""
     mode: str = "greedy"
     temperature: float = 1.0
     top_k: int | None = None
+    top_p: float | None = None
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -48,6 +64,8 @@ class SamplingParams:
                              "(use mode='greedy' for argmax decoding)")
         if self.top_k is not None and self.top_k < 1:
             raise ValueError(f"top_k must be >= 1, got {self.top_k}")
+        if self.top_p is not None and not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
 
     @property
     def needs_rng(self) -> bool:
@@ -64,6 +82,50 @@ def step_keys(keys, index):
     return jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, index)
 
 
+def fold_pos_keys(keys, positions, stream: int):
+    """Per-request, per-position stream keys: fold each request's
+    absolute position, then a stream tag.  The tagged streams are
+    disjoint from the plain engine's untagged ``fold_in(position)``
+    stream, so a speculative engine never replays the sequential
+    engine's draws out of order.
+
+    keys: (B, 2);  positions: (B,) or (B, T) int32 -> keys of matching
+    leading shape."""
+    def fold2(k, p):
+        return jax.random.fold_in(jax.random.fold_in(k, p), stream)
+    if jnp.ndim(positions) == 1:
+        return jax.vmap(fold2)(keys, positions)
+    return jax.vmap(jax.vmap(fold2, in_axes=(None, 0)))(keys, positions)
+
+
+def modified_logits(logits, params: SamplingParams) -> jnp.ndarray:
+    """f32 logits after temperature / top-k / top-p — the distribution
+    both :func:`sample_token` and the speculative residual-rejection
+    rule (:func:`speculative_accept`) draw from; masked-out tokens sit
+    at ``_NEG_INF``."""
+    l = logits.astype(jnp.float32) / params.temperature
+    if params.top_k is not None and params.top_k < l.shape[-1]:
+        kth = jax.lax.top_k(l, params.top_k)[0][..., -1:]
+        l = jnp.where(l < kth, _NEG_INF, l)
+    if params.top_p is not None and params.top_p < 1.0:
+        # nucleus: keep the smallest descending-probability prefix with
+        # cumulative mass >= top_p — i.e. every token whose EXCLUSIVE
+        # prefix sum is still < top_p.  The probability of the last
+        # kept sorted entry is the threshold mapped back to vocab
+        # order (ties at the threshold are all kept).
+        p = jax.nn.softmax(l, axis=-1)
+        sp = jnp.flip(jnp.sort(p, axis=-1), axis=-1)
+        keep = (jnp.cumsum(sp, axis=-1) - sp) < params.top_p
+        thr = jnp.min(jnp.where(keep, sp, jnp.inf), axis=-1, keepdims=True)
+        l = jnp.where(p >= thr, l, _NEG_INF)
+    return l
+
+
+def sampling_probs(logits, params: SamplingParams) -> jnp.ndarray:
+    """Normalized probabilities of the modified distribution (f32)."""
+    return jax.nn.softmax(modified_logits(logits, params), axis=-1)
+
+
 def sample_token(logits, params: SamplingParams, keys=None) -> jnp.ndarray:
     """logits: (B, V) -> (B,) int32 token ids.
 
@@ -71,8 +133,73 @@ def sample_token(logits, params: SamplingParams, keys=None) -> jnp.ndarray:
     ignored for greedy)."""
     if params.mode == "greedy":
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    l = logits.astype(jnp.float32) / params.temperature
-    if params.top_k is not None and params.top_k < l.shape[-1]:
-        kth = jax.lax.top_k(l, params.top_k)[0][..., -1:]
-        l = jnp.where(l < kth, _NEG_INF, l)
+    l = modified_logits(logits, params)
     return jax.vmap(jax.random.categorical)(keys, l).astype(jnp.int32)
+
+
+def speculative_accept(verify_logits, draft_logits, draft_tokens,
+                       params: SamplingParams, keys=None, positions=None):
+    """Vectorized draft-k-verify-once accept/reject — pure ``lax`` ops,
+    run inside the generation scan.
+
+    verify_logits: (B, k+1, V) target logits at the verify window rows
+    (row 0 scores the context token t0, so row i is the target
+    distribution for emitted token i);  draft_logits: (B, k, V) the
+    draft distributions that proposed ``draft_tokens`` (B, k).
+
+    Greedy: acceptance length = leading run of exact argmax matches.
+    Sample: standard residual rejection — draft i is accepted iff
+    ``u_i * q_i(d_i) <= p_i(d_i)`` with ``u_i`` uniform; on the first
+    rejection the correction token is drawn from
+    ``normalize(max(p - q, 0))``.  The all-accepted bonus token falls
+    out of the same formula with ``q`` padded to zero at row k (the
+    residual is then ``p_k`` itself).  ``keys``: (B, 2) per-request
+    streams; ``positions``: (B,) absolute position at which emitted
+    token 0 lands — draws use :func:`fold_pos_keys` per emitted
+    position, so they are invariant to batch composition.
+
+    Returns ``(accept, tokens)``: accept (B,) int32 in [0, k] — the
+    number of drafts accepted — and tokens (B, k+1) where columns
+    ``< accept`` are the accepted drafts and column ``accept`` is the
+    correction/bonus token (columns beyond are padding the caller must
+    mask via accept).
+    """
+    B, kp1, _ = verify_logits.shape
+    k = kp1 - 1
+    vl = verify_logits.astype(jnp.float32)
+    cols = jnp.arange(kp1)
+    if params.mode == "greedy":
+        t_hat = jnp.argmax(vl, axis=-1).astype(jnp.int32)       # (B, k+1)
+        match = (draft_tokens == t_hat[:, :k]).astype(jnp.int32)
+        accept = jnp.cumprod(match, axis=1).sum(axis=1)         # (B,)
+        corr = jnp.take_along_axis(t_hat, accept[:, None], axis=1)[:, 0]
+    else:
+        p = sampling_probs(vl, params)                          # (B,k+1,V)
+        q = sampling_probs(draft_logits.astype(jnp.float32), params)
+        p_d = jnp.take_along_axis(p[:, :k], draft_tokens[..., None],
+                                  axis=-1)[..., 0]              # (B, k)
+        q_d = jnp.take_along_axis(q, draft_tokens[..., None],
+                                  axis=-1)[..., 0]
+        ukeys = fold_pos_keys(keys, positions[:, None] + jnp.arange(k),
+                              ACCEPT_STREAM)
+        u = jax.vmap(jax.vmap(lambda kk: jax.random.uniform(kk, ())))(ukeys)
+        ok = (u * q_d <= p_d).astype(jnp.int32)
+        accept = jnp.cumprod(ok, axis=1).sum(axis=1)            # (B,)
+        # unified correction/bonus: residual at the first rejected row
+        # (q padded with zeros at row k makes the bonus draw p_k itself)
+        q_pad = jnp.concatenate([q, jnp.zeros_like(q[:, :1])], axis=1)
+        p_at = jnp.take_along_axis(p, accept[:, None, None], axis=1)[:, 0]
+        q_at = jnp.take_along_axis(q_pad, accept[:, None, None],
+                                   axis=1)[:, 0]
+        r = jnp.maximum(p_at - q_at, 0.0)                       # (B, V)
+        den = r.sum(axis=-1, keepdims=True)
+        # degenerate residual (q covers p exactly under f32): fall back
+        # to the target distribution itself
+        r = jnp.where(den > 0.0, r / jnp.maximum(den, 1e-30), p_at)
+        ckeys = fold_pos_keys(keys, positions + accept, CORRECTION_STREAM)
+        corr = jax.vmap(jax.random.categorical)(ckeys, jnp.log(r))
+    corr = corr.astype(jnp.int32)
+    d_pad = jnp.concatenate(
+        [draft_tokens, jnp.zeros((B, 1), jnp.int32)], axis=1)
+    tokens = jnp.where(cols[None, :] < accept[:, None], d_pad, corr[:, None])
+    return accept.astype(jnp.int32), tokens.astype(jnp.int32)

@@ -1,0 +1,144 @@
+"""Ragged-decode attention conformance — the kernel contract behind
+speculative verify (DESIGN.md Sec. 15).
+
+``ops.sdpa_decode`` scores a (Tq = k+1)-row verify window at
+PER-REQUEST ragged positions.  The lossless-speculation contract needs
+the multi-row call to be BIT-identical to Tq=1 decode calls row by
+row: ``grouped_sdpa_decode_ref`` guarantees this by construction (it
+lax.map's exact single-row blocks, so each row's reduction order is
+the Tq=1 order no matter what Tq is), and the Pallas flash kernel
+already processes rows independently.  Both invariants are pinned here
+under jit — eager-vs-jit XLA dispatch lowers differently, so the
+engine's bitwise contracts (and these tests) compare compiled
+executables only.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import KernelConfig
+
+KEY = jax.random.PRNGKey(0)
+REF = KernelConfig(backend="ref")
+PALLAS = KernelConfig(backend="pallas", interpret=True)
+
+# (H, KV, hd, hd_v): GQA, MQA, MHA, and the MLA-shaped head (hd_v != hd
+# — the decompressed latent attention the MLA decode path serves with;
+# its fused Tq>1 output contraction is exactly the case a naive ref
+# would re-associate)
+FAMILIES = [
+    ("gqa", 8, 2, 32, 32),
+    ("mqa", 4, 1, 32, 32),
+    ("mha", 4, 4, 32, 32),
+    ("mla", 4, 4, 64, 32),
+]
+
+
+def _case(seed, *, B, Tq, H, KV, hd, hd_v, S):
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    q = jax.random.normal(ks[0], (B, Tq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd_v), jnp.float32)
+    return q, k, v
+
+
+def _row_scan(q, k, v, q_start, k_valid, config, **kw):
+    """Tq=1 decode calls row by row inside one compiled scan — the
+    oracle the verify window must reproduce bitwise."""
+    def body(_, i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i, 1, axis=1)
+        o = ops.sdpa_decode(qi, k, v, q_start=q_start + i,
+                            k_valid_len=k_valid, config=config, **kw)
+        return None, o[:, 0]
+    _, rows = jax.lax.scan(body, None, jnp.arange(q.shape[1]))
+    return jnp.moveaxis(rows, 0, 1)
+
+
+@pytest.mark.parametrize("fam,H,KV,hd,hd_v", FAMILIES)
+@pytest.mark.parametrize("softcap", [None, 30.0], ids=["plain", "softcap"])
+def test_verify_window_bitwise_vs_per_row_decode(fam, H, KV, hd, hd_v,
+                                                 softcap):
+    """One (B, k+1)-row ragged verify call == k+1 single-row decode
+    calls, bit for bit, on the ref backend under jit."""
+    B, Tq, S = 2, 5, 24
+    q, k, v = _case(1, B=B, Tq=Tq, H=H, KV=KV, hd=hd, hd_v=hd_v, S=S)
+    qs = jnp.asarray([3, 11], jnp.int32)
+    kv = qs + Tq
+    kw = dict(softcap=softcap)
+    fused = jax.jit(functools.partial(
+        ops.sdpa_decode, q_start=qs, k_valid_len=kv, config=REF, **kw))(
+        q, k, v)
+    rows = jax.jit(functools.partial(
+        _row_scan, q_start=qs, k_valid=kv, config=REF, **kw))(q, k, v)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(rows))
+
+
+@pytest.mark.parametrize("fam,H,KV,hd,hd_v", FAMILIES)
+def test_verify_window_bitwise_pallas_interpret(fam, H, KV, hd, hd_v):
+    """The same row-decomposition invariant for the Pallas flash kernel
+    (interpret mode): rows are independent grid cells, so the fused
+    window is bitwise equal to per-row calls."""
+    B, Tq, S = 2, 4, 16
+    q, k, v = _case(2, B=B, Tq=Tq, H=H, KV=KV, hd=hd, hd_v=hd_v, S=S)
+    qs = jnp.asarray([2, 9], jnp.int32)
+    kv = qs + Tq
+    fused = jax.jit(functools.partial(
+        ops.sdpa_decode, q_start=qs, k_valid_len=kv, config=PALLAS))(
+        q, k, v)
+    rows = jax.jit(functools.partial(
+        _row_scan, q_start=qs, k_valid=kv, config=PALLAS))(q, k, v)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(rows))
+
+
+@pytest.mark.parametrize("fam,H,KV,hd,hd_v", FAMILIES)
+@pytest.mark.parametrize("Tq,q_start,k_valid", [
+    (1, [7, 15], [8, 16]),       # plain decode step
+    (3, [0, 5], [3, 8]),         # verify window incl. a fresh slot
+    (5, [4, 11], [9, 16]),       # deeper window, ragged positions
+])
+def test_pallas_decode_matches_ref(fam, H, KV, hd, hd_v, Tq, q_start,
+                                   k_valid):
+    """Pallas (interpret) vs ref across ragged (q_start, k_valid_len)
+    sweeps — the backend-parity tolerance contract."""
+    q, k, v = _case(3, B=2, Tq=Tq, H=H, KV=KV, hd=hd, hd_v=hd_v, S=16)
+    qs = jnp.asarray(q_start, jnp.int32)
+    kv = jnp.asarray(k_valid, jnp.int32)
+    got = ops.sdpa_decode(q, k, v, q_start=qs, k_valid_len=kv,
+                          config=PALLAS)
+    want = ops.sdpa_decode(q, k, v, q_start=qs, k_valid_len=kv, config=REF)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_decode_ref_matches_shared_scalar_ref():
+    """With every row at the same position, the ragged decode ref
+    agrees with the (q_chunk-scanned) training ref to f32 tolerance —
+    same math, different reduction grouping."""
+    q, k, v = _case(4, B=2, Tq=4, H=4, KV=4, hd=32, hd_v=32, S=16)
+    kv = jnp.asarray([12, 16], jnp.int32)
+    got = ref.grouped_sdpa_decode_ref(q, k, v, q_start=jnp.asarray([8, 8]),
+                                      k_valid_len=kv)
+    want = ref.grouped_sdpa_ref(q, k, v, q_pos0=8, k_valid_len=kv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_sdpa_decode_window_and_scale():
+    """window / scale plumbing reaches the mask: a 1-token sliding
+    window reduces each row to self-attention (output == the row's own
+    value mean over groups at any scale)."""
+    B, Tq, H, KV, hd, S = 1, 3, 2, 2, 16, 12
+    q, k, v = _case(5, B=B, Tq=Tq, H=H, KV=KV, hd=hd, hd_v=hd, S=S)
+    qs = jnp.asarray([6], jnp.int32)
+    out = ops.sdpa_decode(q, k, v, q_start=qs, k_valid_len=qs + Tq,
+                          window=1, scale=0.123, config=REF)
+    # window=1 keeps only key position == query position: softmax over
+    # a single logit is 1, so each row returns that position's value
+    want = jnp.stack([v[:, 6 + i] for i in range(Tq)], axis=1)
+    want = jnp.repeat(want, H // KV, axis=2).reshape(B, Tq, H, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-6, rtol=1e-6)
